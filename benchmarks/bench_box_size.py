@@ -1,0 +1,29 @@
+"""Paper Fig. 6(a) group 3: average boxes per GPU (box size trade-off).
+
+Smaller boxes -> finer cost pixelization -> higher efficiency, but more
+guard cells + per-box overhead.  Paper optimum: ~9 boxes/GPU.  We sweep
+box sizes 8/16/32 on a 128^2 domain with 8 virtual devices (32/8/2 boxes
+per device) and report both efficiency and total modeled walltime
+(including the halo-comm and LB-overhead terms that punish tiny boxes).
+"""
+from __future__ import annotations
+
+from .common import run_sim, row
+
+
+def run():
+    rows = []
+    for box_cells in (8, 16, 32):
+        sim = run_sim(problem_kwargs={"box_cells": box_cells})
+        boxes_per_dev = sim.grid.n_boxes / sim.config.n_virtual_devices
+        comm = sum(r.comm_time for r in sim.cluster.records)
+        rows.append(
+            row(
+                f"fig6a_boxes_per_gpu/{boxes_per_dev:g}",
+                sim,
+                box_cells=box_cells,
+                n_boxes=sim.grid.n_boxes,
+                halo_comm_s=round(comm, 6),
+            )
+        )
+    return rows

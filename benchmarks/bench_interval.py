@@ -1,0 +1,23 @@
+"""Paper Fig. 6(a) group 4: load-balance interval sweep.
+
+Paper: walltime flat over intervals 1-30 (the gate makes frequent calls
+cheap — gather is <=2.3% of walltime), increasing for >~30 (stale balance).
+"""
+from __future__ import annotations
+
+from .common import run_sim, row
+
+
+def run():
+    rows = []
+    for interval in (1, 3, 10, 30, 100):
+        sim = run_sim(lb_interval=interval, n_steps=60)
+        gather_frac = sim.cluster.lb_overhead_fraction
+        rows.append(
+            row(
+                f"fig6a_lb_interval/{interval}",
+                sim,
+                gather_plus_redistribute_frac=round(gather_frac, 4),
+            )
+        )
+    return rows

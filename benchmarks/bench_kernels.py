@@ -1,0 +1,61 @@
+"""Pallas kernel microbenchmarks (deposition + gather/push).
+
+NOTE: kernels run in interpret mode on CPU (the container has no TPU), so
+us_per_call reflects the *interpreter*, not TPU performance — the TPU-side
+performance statement is the roofline analysis.  What this bench validates
+is the work-counter accounting and the oracle-vs-kernel equivalence cost.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels.deposition import deposit_local_tiles
+from repro.pic import Grid2D
+from repro.kernels.ref import work_counters_ref
+
+
+def run():
+    rows = []
+    grid = Grid2D(nz=64, nx=64, dz=0.3, dx=0.3, box_nz=16, box_nx=16)
+    rng = np.random.default_rng(0)
+    n = 4096
+    cap = 1024
+    from tests.test_kernels import random_particles  # reuse the fixture
+
+    p = random_particles(n, grid, seed=1)
+    b = kops.bin_particles(p, grid, cap)
+    live = jnp.arange(cap)[None, :] < b.counts[:, None]
+    coef = jnp.where(live, 1.0, 0.0)
+
+    f = jax.jit(
+        lambda c, sz, sx, v: deposit_local_tiles(
+            c, sz, sx, v, v, v, grid=grid, tile=256, interpret=True
+        )
+    )
+    out = f(b.counts, b.sz, b.sx, coef)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = f(b.counts, b.sz, b.sx, coef)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / 3
+    counters = np.asarray(out[3])
+    expected = np.asarray(work_counters_ref(b.counts, grid, tile=256, which="deposit"))
+    rows.append(
+        {
+            "name": "pallas_deposition_interpret",
+            "us_per_call": round(1e6 * dt, 1),
+            "derived": {
+                "n_particles": n,
+                "n_boxes": grid.n_boxes,
+                "counters_match_formula": bool(np.allclose(counters, expected)),
+                "total_work_units": float(counters.sum()),
+            },
+        }
+    )
+    return rows

@@ -1,0 +1,39 @@
+"""Paper Fig. 6(a) group 2 + Fig. 4: knapsack vs SFC distribution mapping.
+
+Reproduction targets: knapsack efficiency >= SFC efficiency (spatial
+constraint), SFC moves fewer bytes / keeps neighbours co-located (smaller
+halo-comm term), net walltime comparable (paper: 'at best, SFC is about
+comparable to knapsack').
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import run_sim, row
+
+
+def run():
+    rows = []
+    sims = {}
+    for policy in ("knapsack", "sfc"):
+        sim = run_sim(lb_policy=policy)
+        sims[policy] = sim
+        comm = sum(r.comm_time for r in sim.cluster.records)
+        rows.append(row(f"fig6a_policy/{policy}", sim, halo_comm_s=round(comm, 6)))
+    rows.append(
+        {
+            "name": "fig4_policy_comparison",
+            "us_per_call": 0.0,
+            "derived": {
+                "knapsack_eff_minus_sfc_eff": round(
+                    sims["knapsack"].mean_efficiency - sims["sfc"].mean_efficiency, 4
+                ),
+                "sfc_comm_over_knapsack_comm": round(
+                    sum(r.comm_time for r in sims["sfc"].cluster.records)
+                    / max(sum(r.comm_time for r in sims["knapsack"].cluster.records), 1e-12),
+                    4,
+                ),
+            },
+        }
+    )
+    return rows

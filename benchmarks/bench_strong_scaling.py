@@ -1,0 +1,43 @@
+"""Paper Fig. 7: strong scaling of the uniform-plasma baseline.
+
+Fixed problem, increasing virtual devices; fit t ∝ n^-x (paper: x=0.91 in
+2D3V).  The non-ideality comes from the halo-communication term, which does
+not shrink with device count as fast as compute does.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import StrongScalingModel
+from repro.pic import Simulation, SimConfig, uniform_plasma_problem
+
+from .common import row
+
+
+def run():
+    rows = []
+    n_devices = [2, 4, 8, 16, 32]
+    walltimes = []
+    for n in n_devices:
+        problem = uniform_plasma_problem(nz=128, nx=128, box_cells=16, ppc=4)
+        sim = Simulation(problem, SimConfig(n_virtual_devices=n, lb_enabled=False))
+        import time
+
+        t0 = time.perf_counter()
+        sim.run(15)
+        sim.host_seconds = time.perf_counter() - t0
+        walltimes.append(sim.modeled_walltime)
+        rows.append(row(f"fig7_strong_scaling/n{n}", sim))
+    model = StrongScalingModel.fit(n_devices, walltimes)
+    rows.append(
+        {
+            "name": "fig7_strong_scaling_fit",
+            "us_per_call": 0.0,
+            "derived": {
+                "x_exponent": round(model.x, 4),
+                "paper_x_2d3v": 0.91,
+                "A": round(model.A, 6),
+            },
+        }
+    )
+    return rows

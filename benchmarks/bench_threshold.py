@@ -1,0 +1,16 @@
+"""Paper Fig. 6(a) group 5: efficiency-improvement threshold sweep.
+
+Too low -> frequent costly redistribution; too high -> stale balance.
+Paper optimum: 10%.
+"""
+from __future__ import annotations
+
+from .common import run_sim, row
+
+
+def run():
+    rows = []
+    for threshold in (0.05, 0.10, 0.15):
+        sim = run_sim(lb_threshold=threshold, n_steps=60)
+        rows.append(row(f"fig6a_threshold/{int(threshold * 100)}pct", sim))
+    return rows

@@ -1,0 +1,271 @@
+"""Trip-count-aware analysis of partitioned HLO (roofline inputs).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scanned program (layers, grad-accum microbatches, flash-attention blocks)
+is undercounted by the trip counts.  This module parses the optimized HLO
+text into computations, extracts while-loop trip counts from their
+condition computations, propagates execution multipliers down the call
+graph (entry=1, while body xN, fusion/call x1), and computes:
+
+  * matmul FLOPs:      2 * prod(result_dims) * prod(contracting_dims)
+                       per dot, weighted by multiplier — includes remat
+                       recompute, which is exactly what §Roofline's
+                       MODEL_FLOPS/HLO_FLOPS ratio is meant to expose;
+  * collective bytes:  per-chip payload per kind (all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute),
+                       weighted by multiplier;
+  * HBM traffic proxy: sum of result-buffer bytes of top-level instructions
+                       (fusion internals excluded — they stay in
+                       registers/VMEM), weighted by multiplier.
+
+Shapes in post-SPMD HLO are per-partition, so all outputs are per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HLOAnalysis"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"^\(?((?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?")
+_ONE_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + list of (dtype, dims) arrays in a (possibly tuple) type."""
+    arrays = []
+    total = 0
+    for dt, dims in _ONE_SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        n = 1
+        for x in d:
+            n *= x
+        arrays.append((dt, d))
+        total += n * _DTYPE_BYTES[dt]
+    return total, arrays
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    by_name: Dict[str, Instruction] = field(default_factory=dict)
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if current is None:
+            # computation headers: `%name (args...) -> type {` — args may
+            # contain nested parens (tuple-typed params), so match loosely
+            if line.endswith("{") and "->" in line:
+                m = _COMP_NAME.match(line)
+                if m:
+                    current = Computation(m.group(1))
+                    if raw.startswith("ENTRY"):
+                        entry = current.name
+            continue
+        if line == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        sm = _SHAPE.match(rhs)
+        type_str = sm.group(1) if sm else ""
+        after = rhs[sm.end():] if sm else rhs
+        om = re.match(r"[\)\}\s]*([\w\-]+)\(", after)
+        op = om.group(1) if om else ""
+        instr = Instruction(name=name, type_str=type_str, op=op, rhs=rhs)
+        current.instructions.append(instr)
+        current.by_name[name] = instr
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Largest integer constant in the while condition ~= trip count."""
+    consts = []
+    for ins in cond.instructions:
+        cm = re.search(r"constant\((\d+)\)", ins.rhs)
+        if cm:
+            consts.append(int(cm.group(1)))
+    return max(consts) if consts else None
+
+
+def _called_computations(ins: Instruction) -> List[Tuple[str, str]]:
+    """(kind, computation_name) pairs referenced by an instruction."""
+    out = []
+    for key in ("body", "condition", "to_apply", "calls"):
+        for m in re.finditer(rf"{key}=%?([\w\.\-]+)", ins.rhs):
+            out.append((key, m.group(1)))
+    return out
+
+
+def _operand_names(ins: Instruction) -> List[str]:
+    inner = ins.rhs[ins.rhs.find("(") + 1 :]
+    depth = 1
+    buf, names = "", []
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            names.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    names.append(buf)
+    out = []
+    for n in names:
+        m = re.search(r"%([\w\.\-]+)", n)
+        out.append(m.group(1) if m else "")
+    return out
+
+
+@dataclass
+class HLOAnalysis:
+    dot_flops: float
+    collective_bytes: Dict[str, float]
+    collective_total: float
+    traffic_bytes: float
+    trip_counts: Dict[str, int]
+    n_dots: int
+
+    @property
+    def summary(self) -> dict:
+        return {
+            "dot_flops_per_chip": self.dot_flops,
+            "collective_bytes_per_chip": self.collective_total,
+            "collective_bytes_by_kind": self.collective_bytes,
+            "traffic_bytes_per_chip": self.traffic_bytes,
+            "while_trip_counts": self.trip_counts,
+            "n_dot_sites": self.n_dots,
+        }
+
+
+def analyze_hlo(hlo: str) -> HLOAnalysis:
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        # fall back: the largest computation is the entry
+        entry = max(comps, key=lambda c: len(comps[c].instructions))
+
+    multipliers: Dict[str, float] = {c: 0.0 for c in comps}
+    trip_counts: Dict[str, int] = {}
+
+    def visit(comp_name: str, mult: float):
+        if comp_name not in comps:
+            return
+        multipliers[comp_name] += mult
+        comp = comps[comp_name]
+        for ins in comp.instructions:
+            called = _called_computations(ins)
+            if ins.op == "while" or " while(" in ins.rhs:
+                body = next((c for k, c in called if k == "body"), None)
+                cond = next((c for k, c in called if k == "condition"), None)
+                trips = _trip_count(comps[cond]) if cond in comps else None
+                trips = trips if trips and trips > 0 else 1
+                if body:
+                    trip_counts[body] = trips
+                    visit(body, mult * trips)
+                if cond:
+                    visit(cond, mult * (trips + 1))
+            else:
+                for _, c in called:
+                    visit(c, mult)
+
+    visit(entry, 1.0)
+
+    dot_flops = 0.0
+    n_dots = 0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    traffic = 0.0
+
+    for cname, comp in comps.items():
+        mult = multipliers.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        is_fusion_body = cname.startswith("fused_") or ".fused" in cname
+        for ins in comp.instructions:
+            result_bytes, _ = _shape_info(ins.type_str)
+            # --- dots ---
+            if ins.op == "dot":
+                _, res_arrays = _shape_info(ins.type_str)
+                res_elems = 1
+                for _, dims in res_arrays:
+                    for d in dims:
+                        res_elems *= d
+                kdim = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+                ops = _operand_names(ins)
+                lhs = comp.by_name.get(ops[0]) if ops else None
+                if cm and lhs is not None:
+                    _, lhs_arrays = _shape_info(lhs.type_str)
+                    if lhs_arrays:
+                        dims = lhs_arrays[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                kdim *= dims[int(ci)]
+                dot_flops += mult * 2.0 * res_elems * kdim
+                n_dots += 1
+            # --- collectives ---
+            for kind in _COLLECTIVES:
+                if ins.op in (kind, f"{kind}-start"):
+                    group = 1
+                    gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.rhs)
+                    if gm:
+                        group = int(gm.group(2))
+                    else:
+                        gm2 = re.search(r"replica_groups=\{\{([\d,]+)\}", ins.rhs)
+                        if gm2:
+                            group = len(gm2.group(1).split(","))
+                    if kind == "all-gather":
+                        payload = result_bytes / max(group, 1)
+                    elif kind == "reduce-scatter":
+                        payload = result_bytes * max(group, 1)
+                    else:
+                        payload = result_bytes
+                    coll[kind] += mult * payload
+                    break
+            # --- HBM traffic proxy (top-level buffers only) ---
+            if not is_fusion_body and ins.op not in (
+                "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+                "while", "compare",
+            ):
+                traffic += mult * result_bytes
+
+    return HLOAnalysis(
+        dot_flops=dot_flops,
+        collective_bytes=coll,
+        collective_total=sum(coll.values()),
+        traffic_bytes=traffic,
+        trip_counts=trip_counts,
+        n_dots=n_dots,
+    )

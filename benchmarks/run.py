@@ -1,0 +1,51 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived is a JSON object).
+Run as:  PYTHONPATH=src python -m benchmarks.run [--only <module>]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+import traceback
+
+MODULES = [
+    "bench_cost_schemes",   # Fig 6a group 1 + Fig 3
+    "bench_policies",       # Fig 6a group 2 + Fig 4
+    "bench_box_size",       # Fig 6a group 3
+    "bench_interval",       # Fig 6a group 4
+    "bench_threshold",      # Fig 6a group 5
+    "bench_speedup",        # Fig 6b + Fig 5
+    "bench_strong_scaling", # Fig 7
+    "bench_weak_scaling",   # Fig 8
+    "bench_moe_dlb",        # paper technique -> MoE expert parallelism
+    "bench_elastic",        # fault tolerance / checkpoint (runnability)
+    "bench_kernels",        # Pallas kernel microbench (interpret mode)
+    "roofline",             # dry-run roofline summary (deliverable g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single bench module")
+    args = ap.parse_args()
+    modules = [args.only] if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in modules:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])!r}")
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,{json.dumps(traceback.format_exc()[-500:])!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps with the full substrate (synthetic data pipeline, AdamW, per-layer
+remat, checkpointing with restart, loss curve).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.data import SyntheticLMData
+from repro.models import ModelConfig, init_params
+from repro.train.trainstep import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers, d_model 512, vocab 32k
+    cfg = ModelConfig(
+        name="demo-100m", kind="dense", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=4, d_ff=2048, vocab=32_000, qk_norm=True,
+    )
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M parameters")
+
+    state = init_train_state(params)
+    step_fn = jax.jit(make_train_step(cfg, grad_accum=2, lr=1e-3))
+    data = SyntheticLMData(cfg, batch=8, seq_len=128, seed=0)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+        t0 = time.perf_counter()
+        losses = []
+        for s in range(args.steps):
+            state, metrics = step_fn(state, data.batch_at(s))
+            losses.append(float(metrics["loss"]))
+            if s % 20 == 0:
+                rate = (s + 1) / (time.perf_counter() - t0)
+                print(f"step {s:4d}  loss {losses[-1]:.4f}  ({rate:.2f} steps/s)")
+            if s and s % args.ckpt_every == 0:
+                mgr.save_async(state, step=s)
+        mgr.wait()
+        print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+        assert losses[-1] < losses[0], "loss should decrease on structured data"
+        print("checkpoints kept:", mgr.latest_step())
+
+
+if __name__ == "__main__":
+    main()

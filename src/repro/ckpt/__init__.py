@@ -1,0 +1,4 @@
+"""Fault-tolerance substrate: checkpoint/restore."""
+from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

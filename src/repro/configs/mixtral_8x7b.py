@@ -1,0 +1,31 @@
+"""mixtral-8x7b [moe]: 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000
+[arXiv:2401.04088; hf]  SWA window 4096 bounds the KV reach ->
+runs long_500k (ring cache).
+"""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    kind="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab=32_000,
+    n_experts=8,
+    top_k=2,
+    capacity_factor=1.25,
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    sub_quadratic=True,
+    source="arXiv:2401.04088",
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=96,
+    vocab=512, n_experts=4, top_k=2, sliding_window=16,
+)

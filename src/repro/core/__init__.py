@@ -1,0 +1,54 @@
+"""The paper's primary contribution: in-situ device-side cost measurement +
+dynamic load balancing with gated distribution-mapping updates, plus the
+strong-scaling performance model used to assess it.
+
+The abstraction is model-agnostic: *work items* (PIC boxes, MoE experts,
+serving requests) with in-situ measured costs are assigned to devices by a
+distribution mapping, re-computed under a knapsack or space-filling-curve
+policy and adopted only when the efficiency gain clears a threshold.
+"""
+from .costs import (
+    ActivityLedger,
+    ActivityLedgerCost,
+    ActivityRecord,
+    CostMeasure,
+    EMASmoother,
+    HeuristicCost,
+    WorkCounterCost,
+    normalize_costs,
+)
+from .balancer import LBEvent, LoadBalancer, efficiency, make_policy
+from .perfmodel import StrongScalingModel, fit_strong_scaling, predicted_max_speedup
+from .policies import (
+    device_loads,
+    knapsack_partition,
+    morton_index,
+    round_robin_mapping,
+    sfc_partition,
+)
+from .virtual_cluster import StepRecord, VirtualCluster
+
+__all__ = [
+    "ActivityLedger",
+    "ActivityLedgerCost",
+    "ActivityRecord",
+    "CostMeasure",
+    "EMASmoother",
+    "HeuristicCost",
+    "WorkCounterCost",
+    "normalize_costs",
+    "LBEvent",
+    "LoadBalancer",
+    "efficiency",
+    "make_policy",
+    "StrongScalingModel",
+    "fit_strong_scaling",
+    "predicted_max_speedup",
+    "device_loads",
+    "knapsack_partition",
+    "morton_index",
+    "round_robin_mapping",
+    "sfc_partition",
+    "StepRecord",
+    "VirtualCluster",
+]

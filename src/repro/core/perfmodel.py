@@ -1,0 +1,66 @@
+"""Strong-scaling performance model for load balancing (paper §4).
+
+The paper models walltime as ``t_wall ∝ n_nodes^-x`` (x=1 ideal; WarpX
+measures x=0.91 in 2D3V, 0.88 in 3D3V) and derives the maximum speedup
+attainable by perfect load balancing from an initial imbalance:
+
+    S = (c_max0 / c_avg0)^x = (1 / E0)^x          (paper Eq. 2)
+
+Load balancing is "strong scaling applied to the slowest device": the
+device initially assigned c_max0 ends up with c_avg0, i.e. it is
+strong-scaled by the imbalance ratio, discounted by the code's measured
+scaling exponent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["fit_strong_scaling", "predicted_max_speedup", "StrongScalingModel"]
+
+
+def fit_strong_scaling(n_nodes: Sequence[float], walltimes: Sequence[float]) -> Tuple[float, float]:
+    """Log-log least-squares fit of ``t_wall = A * n_nodes^-x``.
+
+    Returns ``(x, A)``.  x in [0, 1] for realistic codes (1 = ideal).
+    """
+    n = np.asarray(n_nodes, dtype=np.float64)
+    t = np.asarray(walltimes, dtype=np.float64)
+    if n.shape != t.shape or n.ndim != 1 or len(n) < 2:
+        raise ValueError("need >= 2 (n_nodes, walltime) samples of equal length")
+    if np.any(n <= 0) or np.any(t <= 0):
+        raise ValueError("n_nodes and walltimes must be positive")
+    slope, intercept = np.polyfit(np.log(n), np.log(t), 1)
+    return float(-slope), float(np.exp(intercept))
+
+
+def predicted_max_speedup(initial_efficiency: float, x: float) -> float:
+    """Paper Eq. 2: ``S = (1/E0)^x``."""
+    if not 0.0 < initial_efficiency <= 1.0:
+        raise ValueError("initial efficiency must be in (0, 1]")
+    return float((1.0 / initial_efficiency) ** x)
+
+
+@dataclass(frozen=True)
+class StrongScalingModel:
+    """Fitted model ``t_wall = A * n_nodes^-x`` with the paper's Eq.-2 helper."""
+
+    x: float
+    A: float
+
+    @classmethod
+    def fit(cls, n_nodes: Sequence[float], walltimes: Sequence[float]) -> "StrongScalingModel":
+        x, A = fit_strong_scaling(n_nodes, walltimes)
+        return cls(x=x, A=A)
+
+    def walltime(self, n_nodes: float) -> float:
+        return self.A * float(n_nodes) ** (-self.x)
+
+    def max_speedup(self, initial_efficiency: float) -> float:
+        return predicted_max_speedup(initial_efficiency, self.x)
+
+    def attained_fraction(self, measured_speedup: float, initial_efficiency: float) -> float:
+        """Fraction of the theoretical maximum achieved (paper reports 62-88%)."""
+        return measured_speedup / self.max_speedup(initial_efficiency)

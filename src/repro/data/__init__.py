@@ -1,0 +1,4 @@
+"""Data substrate."""
+from .pipeline import SyntheticLMData
+
+__all__ = ["SyntheticLMData"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the PIC hot spots (current deposition + particle
+push — the kernels the paper instruments and balances on).
+
+Lazy submodule access: this package is imported by ``repro.pic`` for shared
+constants, so heavier submodules are loaded on attribute access only.
+"""
+from . import constants  # leaf module, safe
+
+__all__ = ["constants", "ops", "deposition", "gather_push", "ref", "common"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,58 @@
+"""Shared in-kernel helpers for the PIC Pallas kernels.
+
+TPU adaptation of scatter/gather (DESIGN.md §2): instead of random-access
+scatter (hostile to the TPU vector units), particle↔grid transfer is cast as
+small dense matmuls against one-hot-weighted *P matrices*:
+
+    P[p, j] = Σ_k w_k(p) · [j == i0(p) + k]        (TILE, tile_extent)
+
+  deposit:  J_tile += (P_z * val[:, None])ᵀ @ P_x      — two MXU matmuls
+  gather :  f(p)    = rowsum((P_z @ F_tile) * P_x)     — one MXU matmul
+
+This turns the paper's current-deposition hotspot into systolic-array work,
+the core hardware-adaptation decision of this repo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Halo sizing: a particle can exit its box by < 1 cell per step (CFL < 1);
+# with the -1/2 staggered components the cubic-spline base index reaches
+# floor(s - 0.5) - 1 ≥ -3 at the lower tile edge, so 3 halo cells are needed
+# (2 would silently drop edge deposits — caught by the end-to-end oracle test).
+HALO = 3
+
+
+def cubic_weights_kernel(s: jax.Array):
+    """Order-3 B-spline base index + 4 weights for positions `s` (cell units).
+
+    Mirrors repro.pic.shapes but is written for in-kernel use (no Python
+    branching, fixed 4-wide output).
+    """
+    i_floor = jnp.floor(s)
+    frac = s - i_floor
+    d0 = frac + 1.0
+    d1 = frac
+    d2 = 1.0 - frac
+    d3 = 2.0 - frac
+
+    def spline(x):
+        ax = jnp.abs(x)
+        inner = 2.0 / 3.0 - ax * ax + 0.5 * ax * ax * ax
+        outer = (2.0 - ax) ** 3 / 6.0
+        return jnp.where(ax <= 1.0, inner, jnp.where(ax <= 2.0, outer, 0.0))
+
+    w = jnp.stack([spline(d0), spline(d1), spline(d2), spline(d3)], axis=-1)
+    return (i_floor - 1.0).astype(jnp.int32), w
+
+
+def p_matrix(s: jax.Array, extent: int) -> jax.Array:
+    """Build the (TILE, extent) spline-indicator matrix for positions `s`
+    (local cell units, already including halo shift and staggering)."""
+    i0, w = cubic_weights_kernel(s)  # (T,), (T,4)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], extent), 1)
+    acc = jnp.zeros((s.shape[0], extent), dtype=w.dtype)
+    for k in range(4):
+        acc = acc + w[:, k][:, None] * (cols == (i0 + k)[:, None]).astype(w.dtype)
+    return acc

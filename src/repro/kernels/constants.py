@@ -1,0 +1,14 @@
+"""Kernel work-accounting constants (leaf module — no repro imports).
+
+These are properties of the kernel implementations (instruction counts per
+particle lane / per cell), NOT user-tunable weights; the whole point of the
+work-counter cost strategy is that these come from the kernel itself.
+Shared by the Pallas kernels and the pure-jnp reference so both produce
+bit-identical counters.
+"""
+
+DEPOSIT_TILE = 256  # particle lanes per kernel inner iteration (2x128)
+DEPOSIT_OPS = 48  # deposition ops per particle lane: 3 components x 16 stencil
+PUSH_OPS = 128  # gather (6 comps x 16 stencil = 96) + Boris push (32)
+GATHER_PUSH_OPS_PER_PARTICLE = DEPOSIT_OPS + PUSH_OPS  # 176
+CELL_OPS = 24  # FDTD update flops per cell (6 components x 4)

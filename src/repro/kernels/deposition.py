@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: current deposition with in-kernel work counters.
+
+One grid step per box (AMReX box == one kernel program).  Each box's
+particles are streamed through fixed-size tiles held in VMEM; deposition is
+cast as dense P-matrix matmuls (MXU work, see kernels/common.py).  The
+kernel accumulates, per box, a **work counter** — the executed work units
+(full tiles actually processed, padding included, plus the box's grid work).
+This is the TPU-native adaptation of the paper's GPU-clock strategy: an
+in-situ, in-kernel, hyperparameter-free measurement of device-side compute
+(DESIGN.md §2).
+
+Block layout per program b:
+  in : counts (1,1) i32 | s_z,s_x,v_x,v_y,v_z (1, cap) f32
+  out: jx,jy,jz (1, BZ, BX) f32 | counter (1,1) i32
+where BZ = box_nz + 2·HALO, BX = box_nx + 2·HALO (halo 3 catches deposits
+from particles up to one cell outside the box — guaranteed by CFL < 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..pic.grid import Grid2D
+from .common import HALO, p_matrix
+
+from .constants import CELL_OPS, DEPOSIT_OPS, DEPOSIT_TILE, PUSH_OPS
+
+__all__ = ["deposit_local_tiles", "DEPOSIT_TILE", "DEPOSIT_OPS", "PUSH_OPS", "CELL_OPS"]
+
+
+def _deposition_kernel(
+    counts_ref,
+    sz_ref,
+    sx_ref,
+    vx_ref,
+    vy_ref,
+    vz_ref,
+    jx_ref,
+    jy_ref,
+    jz_ref,
+    cnt_ref,
+    *,
+    n_tiles_max: int,
+    tile: int,
+    bz: int,
+    bx: int,
+    cells_per_box: int,
+):
+    count = counts_ref[0, 0]
+    dtype = jx_ref.dtype
+    jx_ref[...] = jnp.zeros((1, bz, bx), dtype)
+    jy_ref[...] = jnp.zeros((1, bz, bx), dtype)
+    jz_ref[...] = jnp.zeros((1, bz, bx), dtype)
+    # grid-work term of the counter (zero/stream the box's J tiles)
+    cnt_ref[0, 0] = jnp.int32(cells_per_box * CELL_OPS)
+
+    for t in range(n_tiles_max):
+        @pl.when(t * tile < count)
+        def _process_tile(t=t):
+            sl = pl.dslice(t * tile, tile)
+            sz = sz_ref[0, sl]
+            sx = sx_ref[0, sl]
+            vx = vx_ref[0, sl]
+            vy = vy_ref[0, sl]
+            vz = vz_ref[0, sl]
+            # spline indicator matrices for both staggerings per axis
+            pz0 = p_matrix(sz, bz)  # z-offset 0
+            pz5 = p_matrix(sz - 0.5, bz)  # z-offset 1/2
+            px0 = p_matrix(sx, bx)
+            px5 = p_matrix(sx - 0.5, bx)
+            # deposit: Jc += (Pz * v)ᵀ @ Px  (staggering per component:
+            # jx:(0,1/2)  jy:(0,0)  jz:(1/2,0))
+            f32 = jnp.float32
+            jx_ref[0] += jnp.dot((pz0 * vx[:, None]).T, px5, preferred_element_type=f32).astype(dtype)
+            jy_ref[0] += jnp.dot((pz0 * vy[:, None]).T, px0, preferred_element_type=f32).astype(dtype)
+            jz_ref[0] += jnp.dot((pz5 * vz[:, None]).T, px0, preferred_element_type=f32).astype(dtype)
+            # in-kernel work counter: this tile was executed (padding included)
+            cnt_ref[0, 0] += jnp.int32(tile * DEPOSIT_OPS)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid", "tile", "interpret", "dtype")
+)
+def deposit_local_tiles(
+    counts: jax.Array,  # (n_boxes,) i32 alive particles per box
+    sz: jax.Array,  # (n_boxes, cap) local z coord, cell units, halo origin
+    sx: jax.Array,
+    vx: jax.Array,  # (n_boxes, cap) q·w·v/γ / cell_volume (0 for padding)
+    vy: jax.Array,
+    vz: jax.Array,
+    *,
+    grid: Grid2D,
+    tile: int = DEPOSIT_TILE,
+    interpret: bool = True,
+    dtype=jnp.float32,
+):
+    """Run the deposition kernel over all boxes.
+
+    Returns (jx, jy, jz) local tiles of shape (n_boxes, BZ, BX) and the
+    per-box work counters (n_boxes,) i32.
+    """
+    n_boxes, cap = sz.shape
+    if cap % tile:
+        raise ValueError(f"cap ({cap}) must be a multiple of tile ({tile})")
+    bz = grid.box_nz + 2 * HALO
+    bx = grid.box_nx + 2 * HALO
+    kernel = functools.partial(
+        _deposition_kernel,
+        n_tiles_max=cap // tile,
+        tile=tile,
+        bz=bz,
+        bx=bx,
+        cells_per_box=grid.cells_per_box,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((n_boxes, bz, bx), dtype),
+        jax.ShapeDtypeStruct((n_boxes, bz, bx), dtype),
+        jax.ShapeDtypeStruct((n_boxes, bz, bx), dtype),
+        jax.ShapeDtypeStruct((n_boxes, 1), jnp.int32),
+    ]
+    part_spec = pl.BlockSpec((1, cap), lambda b: (b, 0))
+    tile_spec = pl.BlockSpec((1, bz, bx), lambda b: (b, 0, 0))
+    jx, jy, jz, cnt = pl.pallas_call(
+        kernel,
+        grid=(n_boxes,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),  # counts
+            part_spec,
+            part_spec,
+            part_spec,
+            part_spec,
+            part_spec,
+        ],
+        out_specs=[tile_spec, tile_spec, tile_spec, pl.BlockSpec((1, 1), lambda b: (b, 0))],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(counts.astype(jnp.int32).reshape(n_boxes, 1), sz, sx, vx, vy, vz)
+    return jx, jy, jz, cnt[:, 0]

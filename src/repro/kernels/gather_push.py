@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: fused staggered field gather + Boris push + move.
+
+Per-box program: the box's six field tiles (with halo) live in VMEM; each
+particle tile gathers E and B via P-matrix matmuls (MXU), applies the Boris
+rotation, and advances positions — the 'single-source kernel' structure the
+paper describes for WarpX (current deposition + particle push dominate
+compute).  Work counters accumulate executed particle tiles, as in the
+deposition kernel.
+
+Gather staggering pairs (z, x):  ex (0,1/2)  ey (0,0)  ez (1/2,0)
+                                 bx (1/2,0)  by (1/2,1/2)  bz (0,1/2)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..pic.grid import Grid2D
+from .common import HALO, p_matrix
+from .deposition import PUSH_OPS
+
+__all__ = ["gather_push_move"]
+
+
+def _gather_push_kernel(
+    counts_ref,
+    qm_ref,
+    sz_ref,
+    sx_ref,
+    ux_ref,
+    uy_ref,
+    uz_ref,
+    ex_ref,
+    ey_ref,
+    ez_ref,
+    bxf_ref,
+    byf_ref,
+    bzf_ref,
+    sz_out,
+    sx_out,
+    ux_out,
+    uy_out,
+    uz_out,
+    cnt_ref,
+    *,
+    n_tiles_max: int,
+    tile: int,
+    bz: int,
+    bx: int,
+    dt: float,
+    dt_over_dz: float,
+    dt_over_dx: float,
+):
+    count = counts_ref[0, 0]
+    qmdt2 = qm_ref[0, 0] * (0.5 * dt)
+    # pass-through defaults for non-executed slots
+    sz_out[...] = sz_ref[...]
+    sx_out[...] = sx_ref[...]
+    ux_out[...] = ux_ref[...]
+    uy_out[...] = uy_ref[...]
+    uz_out[...] = uz_ref[...]
+    cnt_ref[0, 0] = jnp.int32(0)
+
+    ex_t = ex_ref[0]
+    ey_t = ey_ref[0]
+    ez_t = ez_ref[0]
+    bx_t = bxf_ref[0]
+    by_t = byf_ref[0]
+    bz_t = bzf_ref[0]
+
+    f32 = jnp.float32
+
+    def gather(pz, px, tile_f):
+        # f(p) = rowsum((Pz @ F) * Px): one MXU matmul + vector reduce
+        zint = jnp.dot(pz, tile_f, preferred_element_type=f32)  # (T, BX)
+        return jnp.sum(zint * px, axis=1)
+
+    for t in range(n_tiles_max):
+        @pl.when(t * tile < count)
+        def _process_tile(t=t):
+            sl = pl.dslice(t * tile, tile)
+            sz = sz_ref[0, sl]
+            sx = sx_ref[0, sl]
+            ux = ux_ref[0, sl]
+            uy = uy_ref[0, sl]
+            uz = uz_ref[0, sl]
+
+            pz0 = p_matrix(sz, bz)
+            pz5 = p_matrix(sz - 0.5, bz)
+            px0 = p_matrix(sx, bx)
+            px5 = p_matrix(sx - 0.5, bx)
+
+            ex = gather(pz0, px5, ex_t)
+            ey = gather(pz0, px0, ey_t)
+            ez = gather(pz5, px0, ez_t)
+            bxp = gather(pz5, px0, bx_t)
+            byp = gather(pz5, px5, by_t)
+            bzp = gather(pz0, px5, bz_t)
+
+            # Boris rotation (mirrors repro.pic.particles.boris_push)
+            umx = ux + qmdt2 * ex
+            umy = uy + qmdt2 * ey
+            umz = uz + qmdt2 * ez
+            gamma_m = jnp.sqrt(1.0 + umx * umx + umy * umy + umz * umz)
+            tx = qmdt2 / gamma_m * bxp
+            ty = qmdt2 / gamma_m * byp
+            tz = qmdt2 / gamma_m * bzp
+            t2 = tx * tx + ty * ty + tz * tz
+            upx = umx + (umy * tz - umz * ty)
+            upy = umy + (umz * tx - umx * tz)
+            upz = umz + (umx * ty - umy * tx)
+            s = 2.0 / (1.0 + t2)
+            ux_n = umx + s * (upy * tz - upz * ty) + qmdt2 * ex
+            uy_n = umy + s * (upz * tx - upx * tz) + qmdt2 * ey
+            uz_n = umz + s * (upx * ty - upy * tx) + qmdt2 * ez
+
+            # move (local cell units)
+            gamma = jnp.sqrt(1.0 + ux_n * ux_n + uy_n * uy_n + uz_n * uz_n)
+            sz_n = sz + dt_over_dz * uz_n / gamma
+            sx_n = sx + dt_over_dx * ux_n / gamma
+
+            sz_out[0, sl] = sz_n
+            sx_out[0, sl] = sx_n
+            ux_out[0, sl] = ux_n
+            uy_out[0, sl] = uy_n
+            uz_out[0, sl] = uz_n
+            cnt_ref[0, 0] += jnp.int32(tile * PUSH_OPS)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("grid", "tile", "interpret", "dt")
+)
+def gather_push_move(
+    counts: jax.Array,  # (n_boxes,) i32
+    sz: jax.Array,  # (n_boxes, cap) local coords (halo origin, cell units)
+    sx: jax.Array,
+    ux: jax.Array,
+    uy: jax.Array,
+    uz: jax.Array,
+    field_tiles,  # tuple of six (n_boxes, BZ, BX) arrays: ex ey ez bx by bz
+    *,
+    grid: Grid2D,
+    qm,  # charge/mass ratio of the species (scalar, may be traced)
+    dt: float,
+    tile: int = 256,
+    interpret: bool = True,
+):
+    """Returns updated (sz, sx, ux, uy, uz) in binned layout + counters."""
+    n_boxes, cap = sz.shape
+    if cap % tile:
+        raise ValueError(f"cap ({cap}) must be a multiple of tile ({tile})")
+    bz = grid.box_nz + 2 * HALO
+    bx = grid.box_nx + 2 * HALO
+    kernel = functools.partial(
+        _gather_push_kernel,
+        n_tiles_max=cap // tile,
+        tile=tile,
+        bz=bz,
+        bx=bx,
+        dt=float(dt),
+        dt_over_dz=float(dt) / grid.dz,
+        dt_over_dx=float(dt) / grid.dx,
+    )
+    part_spec = pl.BlockSpec((1, cap), lambda b: (b, 0))
+    tile_spec = pl.BlockSpec((1, bz, bx), lambda b: (b, 0, 0))
+    cnt_spec = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda b: (0, 0))  # broadcast to all boxes
+    dtype = sz.dtype
+    out_shape = [jax.ShapeDtypeStruct((n_boxes, cap), dtype) for _ in range(5)] + [
+        jax.ShapeDtypeStruct((n_boxes, 1), jnp.int32)
+    ]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_boxes,),
+        in_specs=[cnt_spec, scalar_spec] + [part_spec] * 5 + [tile_spec] * 6,
+        out_specs=[part_spec] * 5 + [cnt_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        counts.astype(jnp.int32).reshape(n_boxes, 1),
+        jnp.asarray(qm, dtype).reshape(1, 1),
+        sz,
+        sx,
+        ux,
+        uy,
+        uz,
+        *field_tiles,
+    )
+    sz_n, sx_n, ux_n, uy_n, uz_n, cnt = outs
+    return sz_n, sx_n, ux_n, uy_n, uz_n, cnt[:, 0]

@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This entrypoint (and ONLY this one) fakes 512 host devices so the
+# production meshes (16x16 single-pod, 2x16x16 multi-pod) can be built.
+
+"""Multi-pod dry-run (deliverable e): for every (architecture x input shape
+x mesh) cell, build shardings, ``jit(...).lower(**input_specs).compile()``,
+print ``memory_analysis()`` / ``cost_analysis()``, and parse collective
+bytes from the partitioned HLO.  Failures here (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the system.
+
+Results are cached per cell as JSON under results/dryrun/ so the sweep is
+restartable; EXPERIMENTS.md §Dry-run / §Roofline are generated from these
+files by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.shapes import SHAPES, applicable, input_specs
+from ..dist.sharding import batch_sharding, default_rules, spec_for, tree_shardings
+from ..models import init_params
+from ..train.trainstep import TrainState, init_train_state, make_train_step
+from ..train.servestep import make_prefill_step, make_serve_step
+from .mesh import make_production_mesh, require_devices
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (§Roofline: collective_bytes is NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-chip collective payload bytes by op kind, from partitioned HLO.
+
+    Shapes in the post-SPMD module are per-partition, so summed result-side
+    bytes approximate what ONE chip moves.  Operand-side conversion:
+    all-gather result = operand x group -> operand bytes = result/group;
+    reduce-scatter result = operand/group -> operand bytes = result x group;
+    all-reduce / all-to-all / collective-permute: operand == result.
+    """
+    per_kind = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        m = re.match(r"\s*\(?([\w\[\],\s{}/#*]*?)\)?\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\(", rhs)
+        if not m:
+            continue
+        kind = m.group(2)
+        if f"{kind}-done" in rhs:
+            continue
+        result_bytes = _shape_bytes(rhs.split(kind)[0])
+        if result_bytes == 0:
+            result_bytes = _shape_bytes(lhs)
+        group = 1
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", rhs)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gm2 = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+            if gm2:
+                group = len(gm2.group(1).split(","))
+        if kind == "all-gather":
+            op_bytes = result_bytes / max(group, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = result_bytes * max(group, 1)
+        else:
+            op_bytes = result_bytes
+        per_kind[kind] += op_bytes
+        counts[kind] += 1
+    return {
+        "bytes_by_kind": per_kind,
+        "counts": counts,
+        "total_per_chip_bytes": sum(per_kind.values()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _decode_state_shardings(state_shapes, mesh, rules):
+    """Shardings for DecodeState pytrees by positional heuristics:
+    shard batch dim over DP axes and the largest head/channel dim over
+    'model' when divisible; replicate otherwise."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    batch_axes = rules["batch"]
+    bsize = int(np.prod([mesh.shape[a] for a in (
+        (batch_axes,) if isinstance(batch_axes, str) else batch_axes)]))
+    msize = int(mesh.shape["model"])
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        # leading axis is the scanned layer stack; batch is axis 1
+        entries = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % bsize == 0 and shape[1] > 1:
+            entries[1] = batch_axes
+        # shard the widest remaining dim over model
+        rest = [(d, i) for i, d in enumerate(shape[2:], start=2)]
+        for d, i in sorted(rest, reverse=True):
+            if d % msize == 0:
+                entries[i] = "model"
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, state_shapes)
+
+
+def lower_cell(arch: str, shape: str, mesh_kind: str, *, compile_opts=None):
+    """Lower + compile one (arch, shape, mesh) cell.  Returns result dict."""
+    cfg = get_config(arch)
+    skip = applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind, "status": "skipped",
+                "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    require_devices(int(np.prod(list(mesh.shape.values()))))
+    spec = SHAPES[shape]
+    # NOTE §Perf iteration 3 (refuted): dropping FSDP weight sharding for
+    # serving made MoE cells WORSE (expert buffers all-gathered) and left
+    # dense cells unchanged — keep FSDP rules everywhere.
+    rules = default_rules(mesh, expert_sharding=cfg.expert_sharding)
+    specs_in = input_specs(cfg, shape)
+
+    params_shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg)[0])
+    param_axes = init_params_spec_only(cfg)
+    params_sh = tree_shardings(param_axes, params_shapes, mesh, rules)
+
+    t0 = time.time()
+    # set_mesh (not the legacy `with mesh:`) so logical activation
+    # constraints (models.common.constrain_batch) see the ambient mesh
+    with jax.sharding.set_mesh(mesh):
+        if spec.mode == "train":
+            state_shapes = jax.eval_shape(init_train_state, params_shapes)
+            state_sh = TrainState(
+                params=params_sh,
+                opt=type(state_shapes.opt)(
+                    step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                    m=params_sh,
+                    v=params_sh,
+                    error_feedback=None,
+                ),
+            )
+            batch_sh = {
+                k: batch_sharding(mesh, rules, shape=v.shape)
+                for k, v in specs_in["batch"].items()
+            }
+            # microbatch = four sequences per DP shard (§Perf iteration 5:
+            # gradient all-reduce traffic scales with the number of
+            # microbatches — 4x fewer rounds cuts the collective term ~4x;
+            # per-layer remat keeps the 4x activation growth bounded)
+            batch_axes = rules["batch"]
+            dp = int(np.prod([mesh.shape[a] for a in (
+                (batch_axes,) if isinstance(batch_axes, str) else batch_axes)]))
+            grad_accum = max(1, spec.global_batch // (dp * 4))
+            step_fn = make_train_step(cfg, grad_accum=grad_accum)
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+            ).lower(state_shapes, specs_in["batch"])
+        elif spec.mode == "prefill":
+            batch_sh = {
+                k: batch_sharding(mesh, rules, shape=v.shape)
+                for k, v in specs_in["batch"].items()
+            }
+            fn = make_prefill_step(cfg)
+            lowered = jax.jit(fn, in_shardings=(params_sh, batch_sh)).lower(
+                params_shapes, specs_in["batch"]
+            )
+        else:  # decode
+            state_shapes = specs_in["state"]
+            state_sh = _decode_state_shardings(state_shapes, mesh, rules)
+            token_sh = batch_sharding(mesh, rules, shape=specs_in["token"].shape)
+            fn = make_serve_step(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(params_sh, token_sh, state_sh), donate_argnums=(2,)
+            ).lower(params_shapes, specs_in["token"], state_shapes)
+
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        print(mem)  # proves it fits (per assignment)
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # persist the partitioned HLO for trip-count-aware roofline analysis
+    # (XLA cost_analysis counts while-loop bodies ONCE — benchmarks/
+    # hlo_analysis.py re-weights by actual trip counts)
+    try:
+        import zstandard
+
+        hlo_dir = RESULTS_DIR / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        (hlo_dir / f"{arch}__{shape}__{mesh_kind}.hlo.zst").write_bytes(
+            zstandard.ZstdCompressor(level=6).compress(hlo.encode())
+        )
+    except Exception as e:  # pragma: no cover
+        print(f"warning: could not persist HLO: {e}")
+
+    n_groups = cfg.n_layers // len(cfg.block_pattern)
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "n_chips": n_chips,
+        "compile_seconds": round(compile_s, 1),
+        "flops_per_chip": cost.get("flops"),
+        "bytes_accessed_per_chip": cost.get("bytes accessed"),
+        "memory_analysis": mem_info,
+        "collectives": coll,
+        "hlo_instruction_count": hlo.count("\n"),
+        "scan_info": {
+            "mode": spec.mode,
+            "grad_accum": (
+                max(1, spec.global_batch // (4 * int(np.prod([
+                    mesh.shape[a] for a in (
+                        (rules["batch"],) if isinstance(rules["batch"], str) else rules["batch"]
+                    )
+                ])))) if spec.mode == "train" else 1
+            ),
+            "layer_groups": cfg.n_layers if cfg.kind == "encdec" else n_groups,
+            "enc_layers": cfg.n_enc_layers,
+            "tail_layers": cfg.n_layers % len(cfg.block_pattern),
+            "seq_len": spec.seq_len,
+            "global_batch": spec.global_batch,
+            "n_params": None,  # filled by roofline from config
+        },
+    }
+    print(json.dumps({k: v for k, v in result.items() if k != "memory_analysis"}, indent=None))
+    return result
+
+
+def init_params_spec_only(cfg):
+    # spec construction is shape-free; run init under eval_shape and keep specs
+    closure = {}
+
+    def build():
+        p, s = init_params(jax.random.PRNGKey(0), cfg)
+        closure["specs"] = s
+        return p
+
+    jax.eval_shape(build)
+    return closure["specs"]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def cell_path(arch: str, shape: str, mesh_kind: str) -> Path:
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh_kind}.json"
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, force: bool = False) -> dict:
+    path = cell_path(arch, shape, mesh_kind)
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    try:
+        result = lower_cell(arch, shape, mesh_kind)
+    except Exception as e:
+        result = {
+            "arch": arch, "shape": shape, "mesh": mesh_kind, "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(f"FAILED {arch} x {shape} x {mesh_kind}: {e}")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=tuple(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or args.shape is None) else (args.shape,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    summary = {"ok": 0, "skipped": 0, "error": 0}
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                r = run_cell(arch, shape, mesh_kind, force=args.force)
+                summary[r["status"]] += 1
+                print(f"[{summary}] {arch} x {shape} x {mesh_kind}: {r['status']}")
+    print("DONE", json.dumps(summary))
+
+
+if __name__ == "__main__":
+    main()

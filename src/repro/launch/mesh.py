@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod);
+multi-pod: 2x16x16 = 512 chips with a leading 'pod' axis (data-parallel
+across pods; the slow-link axis for gradient sync / compression).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "require_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def require_devices(n: int) -> None:
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but only {have} are visible; the dry-run "
+            "entrypoint must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import (see launch/dryrun.py)"
+        )

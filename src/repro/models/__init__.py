@@ -1,0 +1,20 @@
+"""Assigned-architecture model zoo (pure JAX, pytree params, scan-stacked)."""
+from .common import ModelConfig
+from .transformer import (
+    decode_step,
+    forward_train,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward_train",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+]

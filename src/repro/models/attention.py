@@ -1,0 +1,329 @@
+"""Grouped-query attention with RoPE, qk-norm, QKV bias, sliding-window /
+chunked masking, KV caches (full + ring-buffer) and cross-attention.
+
+Covers every attention variant in the assigned pool:
+  qwen3 (qk_norm), yi/phi3 (plain GQA), qwen2.5 (qkv_bias), mixtral (SWA),
+  llama4-scout (chunked), recurrentgemma (local window, MQA), whisper
+  (bidirectional encoder self-attn + decoder cross-attn), qwen2-vl (GQA;
+  M-RoPE simplified to 1-D text RoPE for the backbone — DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, apply_rope, constrain_batch, init_dense, rmsnorm
+
+__all__ = ["init_attention", "attention", "decode_attention", "KVCache", "init_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    """Returns (params, specs) for one attention block."""
+    hd, H, K, D = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params = {
+        "wq": init_dense(ks[0], (D, H * hd), dt),
+        "wk": init_dense(ks[1], (D, K * hd), dt),
+        "wv": init_dense(ks[2], (D, K * hd), dt),
+        "wo": init_dense(ks[3], (H * hd, D), dt),
+    }
+    specs = {
+        "wq": ("embed", "heads_x_hd"),
+        "wk": ("embed", "kv_x_hd"),
+        "wv": ("embed", "kv_x_hd"),
+        "wo": ("heads_x_hd", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        params.update(
+            bq=jnp.zeros((H * hd,), dt), bk=jnp.zeros((K * hd,), dt), bv=jnp.zeros((K * hd,), dt)
+        )
+        specs.update(bq=("heads_x_hd",), bk=("kv_x_hd",), bv=("kv_x_hd",))
+    if cfg.qk_norm:
+        params.update(q_norm=jnp.zeros((hd,), dt), k_norm=jnp.zeros((hd,), dt))
+        specs.update(q_norm=(None,), k_norm=(None,))
+    return params, specs
+
+
+def _project_qkv(p, cfg: ModelConfig, x, x_kv):
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], H, hd)
+    k = k.reshape(*x_kv.shape[:-1], K, hd)
+    v = v.reshape(*x_kv.shape[:-1], K, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _mask(
+    sq: int,
+    skv: int,
+    q_offset,
+    causal: bool,
+    window: Optional[int],
+    chunk: Optional[int],
+):
+    """(sq, skv) boolean mask; True = attend.  Query i has absolute position
+    q_offset + i; key j has absolute position j."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= qpos - kpos < window
+    if chunk is not None:
+        m &= (qpos // chunk) == (kpos // chunk)
+    return m
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,hd)  k/v: (B,T,K,hd)  mask: (S,T) or (B,S,T).  GQA grouped."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None]
+    else:
+        mask_b = mask[:, None, None]
+    scores = jnp.where(mask_b, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+#: sequences at/above this length use the memory-bounded flash path
+FLASH_THRESHOLD = 8192
+FLASH_Q_BLOCK = 512
+FLASH_KV_BLOCK = 1024
+
+
+def _flash_sdpa(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    window: Optional[int],
+    chunk: Optional[int],
+    q_block: int = FLASH_Q_BLOCK,
+    kv_block: int = FLASH_KV_BLOCK,
+):
+    """Online-softmax blocked attention (flash-attention algorithm in pure
+    JAX: scan over query blocks x scan over KV blocks).  Peak memory is one
+    (B, q_block, H, kv_block) score tile instead of (B, S, H, T) — what makes
+    the 32k prefill cells compile within HBM.
+
+    For windowed (SWA) and chunked attention the KV iteration is RESTRICTED
+    to the blocks a query block can actually reach (§Perf iteration 4):
+    mixtral's 4096-token window at 32k context touches ≤5 of 32 KV blocks
+    per query block — a ~6x cut in attention flops and inner-loop trips
+    versus masking-only.  Plain causal attention still scans all blocks
+    (mask-only; per-block early exit would need a data-dependent trip count).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    if S % q_block or T % kv_block:
+        raise ValueError(f"flash blocks must tile the sequence: {S}%{q_block}, {T}%{kv_block}")
+    nq, nk = S // q_block, T // kv_block
+    scale = 1.0 / np.sqrt(hd)
+
+    qb = q.reshape(B, nq, q_block, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, kv_block, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, K, hd).transpose(1, 0, 2, 3, 4)
+
+    # reachable KV-block count per query block (static)
+    reach = None
+    if window is not None:
+        reach = window
+    if chunk is not None:
+        reach = chunk if reach is None else min(reach, chunk)
+    if reach is not None:
+        n_kv_needed = min(nk, (reach + q_block) // kv_block + 1)
+    else:
+        n_kv_needed = nk
+
+    def mask_block(qi, kpos_base):
+        qpos = qi * q_block + jnp.arange(q_block)[:, None]
+        kpos = kpos_base + jnp.arange(kv_block)[None, :]
+        m = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= qpos - kpos < window
+        if chunk is not None:
+            m &= (qpos // chunk) == (kpos // chunk)
+        return m
+
+    def q_step(_, qi_and_block):
+        qi, qtile = qi_and_block  # qtile: (B, q_block, K, G, hd)
+        if reach is not None:
+            # first reachable KV block for the oldest query in this block
+            first = jnp.clip(
+                (qi * q_block - (reach - 1)) // kv_block, 0, nk - n_kv_needed
+            )
+            kb_r = jax.lax.dynamic_slice_in_dim(kb, first, n_kv_needed, axis=0)
+            vb_r = jax.lax.dynamic_slice_in_dim(vb, first, n_kv_needed, axis=0)
+            kj_base = (first + jnp.arange(n_kv_needed)) * kv_block
+        else:
+            kb_r, vb_r = kb, vb
+            kj_base = jnp.arange(nk) * kv_block
+
+        def kv_step(carry, kj_and_kv):
+            m_run, l_run, acc = carry
+            kpos_base, ktile, vtile = kj_and_kv
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qtile, ktile).astype(jnp.float32) * scale
+            s = jnp.where(mask_block(qi, kpos_base)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            corr = jnp.exp(m_run - m_new)
+            p_ = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + p_.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p_.astype(vtile.dtype), vtile
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, K, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kj_base, kb_r, vb_r)
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]  # (B,K,G,q_block,hd)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,qb,K,G,hd)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    return blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S) absolute positions
+    *,
+    causal: bool = True,
+    x_kv: Optional[jax.Array] = None,  # cross-attention source
+    kv_positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+    force_flash: Optional[bool] = None,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    cross = x_kv is not None
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, cfg, x, x_kv)
+    if use_rope and not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions if kv_positions is not None else positions, cfg.rope_theta)
+    # §Perf iteration 6: keep the attention interior batch-sharded only.
+    # GQA kv-head counts (1-10) don't divide the 16-way model axis, so XLA
+    # otherwise shards the QK^T contraction over head_dim and ALL-REDUCES
+    # f32 score tensors (measured 1.34GB x 2-3 per layer trip on train_4k);
+    # batch-only interior keeps per-chip flops identical (batch x heads is
+    # conserved) and replaces that with small bf16 QKV all-gathers.
+    q, k, v = constrain_batch(q), constrain_batch(k), constrain_batch(v)
+    use_flash = (x_kv.shape[1] >= FLASH_THRESHOLD) if force_flash is None else force_flash
+    if use_flash and not cross:
+        out = _flash_sdpa(
+            q, k, v, causal=causal, window=cfg.sliding_window, chunk=cfg.attn_chunk
+        )
+    else:
+        if cross:
+            mask = jnp.ones((x.shape[1], x_kv.shape[1]), bool)
+        else:
+            mask = _mask(x.shape[1], x_kv.shape[1], 0, causal, cfg.sliding_window, cfg.attn_chunk)
+        out = _sdpa(q, k, v, mask)
+    return out.reshape(*x.shape[:-1], -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode path (single-token) with KV caches
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, T, K, hd) — T = min(seq_len, window or chunk)
+    v: jax.Array
+    length: jax.Array  # scalar i32: absolute tokens seen so far
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16, filled: bool = True):
+    """Cache sized to the attention reach: full for global attention, ring of
+    `window` (SWA) or `chunk` (chunked) otherwise.  `filled=True` builds the
+    decode-benchmark state: a cache holding seq_len prior tokens."""
+    reach = seq_len
+    if cfg.sliding_window is not None:
+        reach = min(reach, cfg.sliding_window)
+    if cfg.attn_chunk is not None:
+        reach = min(reach, cfg.attn_chunk)
+    shape = (batch, reach, cfg.n_kv_heads, cfg.hd)
+    length = jnp.asarray(seq_len if filled else 0, jnp.int32)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype), length=length)
+
+
+def decode_attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, D) current token
+    cache: KVCache,
+    *,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # encoder K/V
+    use_rope: bool = True,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step: append to the (ring) cache and attend."""
+    if cross_kv is not None:
+        k_all, v_all = cross_kv
+        B = x.shape[0]
+        q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        mask = jnp.ones((1, k_all.shape[1]), bool)
+        out = _sdpa(q, k_all, v_all, mask)
+        return out.reshape(B, 1, -1) @ p["wo"], cache
+
+    B = x.shape[0]
+    pos = cache.length  # scalar absolute position of the new token
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    if use_rope:
+        posb = jnp.broadcast_to(pos[None], (B, 1))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    T = cache.capacity
+    slot = pos % T  # ring-buffer slot (== pos for full caches until wrap)
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    # absolute position of each slot's entry (RoPE was applied at write time):
+    # slot s holds the most recent token with position ≡ s (mod T)
+    slot_ids = jnp.arange(T)
+    abs_pos = pos - ((slot - slot_ids) % T)
+    valid = abs_pos >= 0
+    if cfg.sliding_window is not None:
+        valid &= pos - abs_pos < cfg.sliding_window
+    if cfg.attn_chunk is not None:
+        valid &= (abs_pos // cfg.attn_chunk) == (pos // cfg.attn_chunk)
+    out = _sdpa(q, k_cache, v_cache, valid[None, :])
+    new_cache = KVCache(k=k_cache, v=v_cache, length=pos + 1)
+    return out.reshape(B, 1, -1) @ p["wo"], new_cache

@@ -1,0 +1,172 @@
+"""Shared model building blocks: config, init, norms, RoPE, sharding rules.
+
+Models are plain pytrees (nested dicts of jnp arrays) + pure functions — no
+framework dependency.  Every parameter carries a tuple of *logical axis
+names*; ``repro.dist.sharding`` maps logical axes to mesh axes to build
+NamedShardings for pjit (MaxText-style logical sharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ModelConfig", "ParamSpec", "init_dense", "rmsnorm", "apply_rope", "rope_freqs", "sinusoidal_positions"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One config covers the whole assigned-architecture pool; unused fields
+    are zero/None for a given family."""
+
+    name: str
+    kind: str  # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # SWA / local-attention window
+    attn_chunk: Optional[int] = None  # llama4-style chunked attention
+    mlp_type: str = "swiglu"  # swiglu | gelu
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+    expert_sharding: str = "tp"  # tp: TP inside experts | ep: experts over model axis
+    moe_impl: str = "sort"  # sort: gather/scatter dispatch | einsum: GShard one-hot (baseline)
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    # --- hybrid (recurrentgemma): repeating block pattern ---
+    block_pattern: Tuple[str, ...] = ("a",)  # 'a' attention | 'r' RG-LRU | 's' SSD
+    rglru_width: int = 0  # recurrent branch width (0 -> d_model)
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 0  # precomputed frontend frames (stub)
+    # --- VLM (qwen2-vl) ---
+    n_patches: int = 0  # early-fusion patch embeddings (stub)
+    # --- numerics ---
+    norm_eps: float = 1e-6
+    param_dtype: Any = jnp.bfloat16
+    vocab_pad_to: int = 256  # pad embedding tables for TP divisibility
+    # --- notes for DESIGN/dry-run bookkeeping ---
+    sub_quadratic: bool = False  # can run long_500k
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table rows: vocab padded for tensor-parallel divisibility
+        (standard practice; padded logits are masked out of the loss)."""
+        if self.vocab_pad_to <= 1:
+            return self.vocab
+        return int(-(-self.vocab // self.vocab_pad_to) * self.vocab_pad_to)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model-flops accounting)."""
+        return int(sum(np.prod(p.shape) for p in jax.tree.leaves(
+            jax.eval_shape(lambda: init_params_shapes(self))
+        )))
+
+    def scaled(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+# A parameter's logical axes, attached via ParamSpec pytree metadata-free:
+# we keep a parallel tree of axis tuples produced at init time.
+ParamSpec = Tuple[str, ...]
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Constrain the leading (batch) dim to the data-parallel mesh axes.
+
+    No-op outside a mesh context (smoke tests) or when the batch dim is not
+    divisible by the DP axis product (global_batch=1 decode).  Without this
+    constraint XLA's sharding propagation can replicate the whole activation
+    path from the (replicated-output) embedding gather — measured as ~16x
+    per-chip compute/temp on train cells (EXPERIMENTS.md §Perf iteration 1).
+    """
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not dp_axes:
+            return x
+        size = 1
+        for a in dp_axes:
+            size *= mesh.shape[a]
+        if x.shape[0] % size != 0:
+            return x
+        spec = P(dp_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def init_dense(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> np.ndarray:
+    """Whisper-style sinusoidal position embeddings (length-agnostic)."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    angle = pos / (10_000 ** (dim / d_model))
+    out = np.zeros((seq, d_model), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return out
+
+
+def init_params_shapes(cfg: ModelConfig):
+    """Shape-only param tree (used by n_params; avoids import cycles)."""
+    from .transformer import init_params
+
+    return init_params(jax.random.PRNGKey(0), cfg)[0]

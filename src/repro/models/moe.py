@@ -1,0 +1,225 @@
+"""Feed-forward blocks: SwiGLU / GeLU MLPs and capacity-based top-k MoE.
+
+The MoE uses GShard-style einsum dispatch (one-hot combine into per-expert
+capacity buffers) so XLA inserts the all-to-alls under SPMD sharding, plus:
+
+  * auxiliary load-balancing loss (Switch-style),
+  * **in-situ expert cost measurement + DLB placement** — the paper's
+    technique applied to expert parallelism: per-expert routed-token counts
+    (heuristic) or dispatched-slot counts (work-counter — counts *capacity
+    slots actually filled*, the executed work) feed ``repro.core.LoadBalancer``;
+    the adopted mapping permutes experts across devices
+    (``apply_expert_permutation``).  See benchmarks/bench_moe_dlb.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, init_dense
+
+__all__ = [
+    "init_mlp",
+    "mlp",
+    "init_moe",
+    "moe",
+    "expert_costs",
+    "apply_expert_permutation",
+]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    if cfg.mlp_type == "swiglu":
+        params = {
+            "w_gate": init_dense(ks[0], (cfg.d_model, d_ff), dt),
+            "w_up": init_dense(ks[1], (cfg.d_model, d_ff), dt),
+            "w_down": init_dense(ks[2], (d_ff, cfg.d_model), dt),
+        }
+        specs = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"), "w_down": ("ff", "embed")}
+    else:  # gelu (whisper)
+        params = {
+            "w_up": init_dense(ks[0], (cfg.d_model, d_ff), dt),
+            "b_up": jnp.zeros((d_ff,), dt),
+            "w_down": init_dense(ks[1], (d_ff, cfg.d_model), dt),
+            "b_down": jnp.zeros((cfg.d_model,), dt),
+        }
+        specs = {
+            "w_up": ("embed", "ff"),
+            "b_up": ("ff",),
+            "w_down": ("ff", "embed"),
+            "b_down": ("embed",),
+        }
+    return params, specs
+
+
+def mlp(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    params = {
+        "router": init_dense(ks[0], (D, E), jnp.float32),
+        "w_gate": init_dense(ks[1], (E, D, F), dt),
+        "w_up": init_dense(ks[2], (E, D, F), dt),
+        "w_down": init_dense(ks[3], (E, F, D), dt),
+    }
+    specs = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "ff"),
+        "w_up": ("experts", "embed", "ff"),
+        "w_down": ("experts", "ff", "embed"),
+    }
+    if cfg.shared_expert:
+        sp, ss = init_mlp(ks[4], cfg, d_ff=cfg.d_ff)
+        params["shared"] = sp
+        specs["shared"] = ss
+    return params, specs
+
+
+def _expert_ffn(p, expert_in):
+    """(E, C, D) -> (E, C, D) through the per-expert SwiGLU weights."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _expert_ffn_batched(p, expert_in):
+    """(B, E, C, D) -> (B, E, C, D); batch dim stays sharded over data."""
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", expert_in, p["w_up"])
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+def moe(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Capacity-based top-k MoE.  Returns (output, stats) where stats carries
+    the in-situ expert cost observations + aux loss.
+
+    Two dispatch implementations with identical semantics (tested):
+      * ``einsum`` — GShard one-hot dispatch/combine tensors.  Paper-faithful
+        SPMD baseline, but the dispatch einsums cost 2·N·K·E·C·D matmul
+        flops — ~80x the expert FFN work at 32k prefill (§Perf iteration 1).
+      * ``sort`` — tokens argsorted by expert; dispatch/combine are gathers/
+        scatter-adds (zero matmul flops).  The optimized default.
+
+    Dispatch is PER SEQUENCE (vmapped over batch): capacity C = ⌈cf·S·K/E⌉
+    per sequence, and all gather/scatter indices stay local to the
+    batch-sharded dimension — no cross-shard resharding of the expert
+    buffers (§Perf iteration 2; global-capacity dispatch forced XLA to
+    reshard (E,C,D) buffers across the data axis every layer).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(np.ceil(cfg.capacity_factor * S * K / E)))  # per-sequence capacity
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) in its expert's buffer (token order)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (B, S, K, E)
+    flat_oh = onehot.reshape(B, S * K, E)
+    pos_in_expert = (jnp.cumsum(flat_oh, axis=1) - flat_oh).reshape(B, S, K, E)
+    pos = (pos_in_expert * onehot).sum(-1)  # (B, S, K)
+    keep = pos < C  # capacity-dropped tokens pass through unchanged
+
+    if cfg.moe_impl == "einsum":
+        def one_seq(xt, g_idx, g_val, po, kp):
+            dispatch = (
+                jax.nn.one_hot(g_idx, E, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(jnp.where(kp, po, C), C + 1, dtype=x.dtype)[..., :C][:, :, None, :]
+            )  # (S, K, E, C)
+            expert_in = jnp.einsum("nkec,nd->ecd", dispatch, xt)
+            combine = dispatch * g_val.astype(x.dtype)[:, :, None, None]
+            return expert_in, combine
+
+        expert_in, combine = jax.vmap(one_seq)(x, gate_idx, gate_vals, pos, keep)
+        expert_out = _expert_ffn_batched(p, expert_in)  # (B, E, C, D)
+        out = jnp.einsum("bnkec,becd->bnd", combine, expert_out)
+    else:
+        def dispatch_seq(xt, g_idx, po, kp):
+            slot = jnp.where(kp, g_idx * C + po, E * C)  # (S, K); E*C = spill
+            token_of_slot = jnp.zeros(E * C + 1, jnp.int32).at[slot.reshape(-1)].set(
+                jnp.repeat(jnp.arange(S, dtype=jnp.int32), K) + 1
+            )  # +1 so 0 = empty slot
+            filled = token_of_slot[: E * C] > 0
+            gather_idx = jnp.maximum(token_of_slot[: E * C] - 1, 0)
+            expert_in = jnp.where(filled[:, None], xt[gather_idx], 0.0).reshape(E, C, D)
+            return expert_in, slot
+
+        expert_in, slot = jax.vmap(dispatch_seq)(x, gate_idx, pos, keep)
+        expert_out = _expert_ffn_batched(p, expert_in).reshape(B, E * C, D)
+
+        def combine_seq(e_out, sl, g_val, kp):
+            padded = jnp.concatenate([e_out, jnp.zeros((1, D), e_out.dtype)])
+            per_choice = padded[jnp.minimum(sl, E * C)]  # (S, K, D)
+            w = jnp.where(kp, g_val, 0.0).astype(x.dtype)
+            return jnp.einsum("nk,nkd->nd", w, per_choice)
+
+        out = jax.vmap(combine_seq)(expert_out, slot, gate_vals, keep)
+
+    if cfg.shared_expert:
+        out = out + mlp(p["shared"], cfg, x.reshape(B * S, D)).reshape(B, S, D)
+    out = out.reshape(B, S, D)
+
+    # --- in-situ cost observations (paper §2.2 analogues) ---
+    tokens_per_expert = onehot.sum((0, 1, 2)).astype(jnp.float32)  # heuristic
+    slots_filled = (
+        (onehot * keep[..., None].astype(jnp.int32)).sum((0, 1, 2)).astype(jnp.float32)
+    )  # work-counter: slots actually dispatched (capacity-clipped = executed)
+    # Switch aux loss: E * Σ_e f_e · P_e
+    f = tokens_per_expert / jnp.maximum(tokens_per_expert.sum(), 1.0)
+    pbar = probs.mean((0, 1))
+    aux_loss = E * jnp.sum(f * pbar)
+    stats = {
+        "tokens_per_expert": tokens_per_expert,
+        "slots_filled": slots_filled,
+        "aux_loss": aux_loss,
+        "dropped_fraction": 1.0 - slots_filled.sum() / jnp.maximum(tokens_per_expert.sum(), 1.0),
+    }
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# DLB for expert parallelism (the paper's technique applied to MoE)
+# ---------------------------------------------------------------------------
+
+
+def expert_costs(stats: Dict[str, jax.Array], strategy: str = "work_counter") -> np.ndarray:
+    """Per-expert cost vector for the LoadBalancer."""
+    key = {"heuristic": "tokens_per_expert", "work_counter": "slots_filled"}[strategy]
+    return np.asarray(stats[key], dtype=np.float64)
+
+
+def apply_expert_permutation(p: Dict, perm: np.ndarray) -> Dict:
+    """Reorder the expert-stacked weights (and router columns) so expert i
+    moves to position perm[i] — the 'redistribution' step of expert DLB.
+    Under `expert_sharding='ep'` the stacked axis is the device axis, so this
+    permutation IS the expert->device re-mapping."""
+    inv = np.argsort(perm)
+    out = dict(p)
+    out["router"] = p["router"][:, inv]
+    for k in ("w_gate", "w_up", "w_down"):
+        out[k] = p[k][inv]
+    return out

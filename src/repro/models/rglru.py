@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = σ(W_a x_t + b_a)                     (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                     (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)          (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Full-sequence path uses ``lax.associative_scan`` over the linear recurrence
+(parallel depth log S — TPU friendly); decode is a single-step update.
+The Griffin recurrent block wraps the RG-LRU with a GeLU gate branch and a
+width-4 causal conv, mirroring the reference architecture.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense
+
+__all__ = ["init_rglru_block", "rglru_forward", "rglru_decode_step", "RGLRUState", "init_rglru_state"]
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, W) recurrent state
+    conv: jax.Array  # (B, conv_width-1, W) conv tail
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    W, D = _width(cfg), cfg.d_model
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    params = {
+        "w_gate_branch": init_dense(ks[0], (D, W), dt),
+        "w_rec_branch": init_dense(ks[1], (D, W), dt),
+        "conv_w": init_dense(ks[2], (cfg.conv_width, W), dt, scale=0.5),
+        "w_a": init_dense(ks[3], (W, W), dt),
+        "b_a": jnp.zeros((W,), jnp.float32) - 1.0,  # bias toward remembering
+        "w_x": init_dense(ks[4], (W, W), dt),
+        "b_x": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.full((W,), 0.7, jnp.float32),  # Λ (softplus -> decay rate)
+        "w_out": init_dense(ks[5], (W, D), dt),
+    }
+    specs = {
+        "w_gate_branch": ("embed", "ff"),
+        "w_rec_branch": ("embed", "ff"),
+        "conv_w": (None, "ff"),
+        "w_a": ("ff", "ff2"),
+        "b_a": ("ff",),
+        "w_x": ("ff", "ff2"),
+        "b_x": ("ff",),
+        "lam": ("ff",),
+        "w_out": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def _gates(p, x):
+    """x: (..., W) post-conv activations -> (a_t, gated input)."""
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def _conv(x, conv_w, tail=None):
+    Wd = conv_w.shape[0]
+    pad = (
+        jnp.zeros((x.shape[0], Wd - 1, x.shape[2]), x.dtype)
+        if tail is None
+        else tail.astype(x.dtype)
+    )
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * conv_w[i] for i in range(Wd))
+    return out, xp[:, -(Wd - 1) :]
+
+
+def rglru_forward(p, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block.  u: (B, S, D)."""
+    gate = jax.nn.gelu(u @ p["w_gate_branch"])
+    x, _ = _conv(u @ p["w_rec_branch"], p["conv_w"])
+    a, b = _gates(p, x)  # (B,S,W) f32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(u.dtype) * gate
+    return y @ p["w_out"]
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    W = _width(cfg)
+    return RGLRUState(
+        h=jnp.zeros((batch, W), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, W), jnp.float32),
+    )
+
+
+def rglru_decode_step(p, cfg: ModelConfig, u: jax.Array, state: RGLRUState):
+    """One token: u (B, 1, D).  O(1) per token (why long_500k runs)."""
+    gate = jax.nn.gelu(u @ p["w_gate_branch"])  # (B,1,W)
+    x, new_tail = _conv(u @ p["w_rec_branch"], p["conv_w"], tail=state.conv)
+    a, b = _gates(p, x[:, 0])  # (B,W)
+    h = a * state.h + b
+    y = h[:, None, :].astype(u.dtype) * gate
+    return y @ p["w_out"], RGLRUState(h=h, conv=new_tail.astype(jnp.float32))

@@ -1,0 +1,182 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan formulation.
+
+Follows the minimal SSD algorithm of Dao & Gu (arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the quadratic (attention-dual)
+form runs on the MXU, between chunks a small recurrent state
+(B, heads, head_dim, state) is carried by ``lax.scan``.  Single-step decode
+updates the state directly (O(1) per token — why mamba2 runs long_500k).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, init_dense
+
+__all__ = ["init_ssd", "ssd_forward", "ssd_decode_step", "SSDState", "init_ssd_state"]
+
+
+class SSDState(NamedTuple):
+    h: jax.Array  # (B, H, P, N) inter-chunk state
+    conv: jax.Array  # (B, W-1, conv_dim) causal-conv tail
+
+
+def _dims(cfg: ModelConfig):
+    H = cfg.ssm_heads or max(1, (2 * cfg.d_model) // cfg.ssm_head_dim)
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    d_inner = H * P
+    conv_dim = d_inner + 2 * N  # conv over [x, B, C]
+    return H, P, N, d_inner, conv_dim
+
+
+def init_ssd(key, cfg: ModelConfig):
+    H, P, N, d_inner, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params = {
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "w_in": init_dense(ks[0], (D, 2 * d_inner + 2 * N + H), dt),
+        "conv_w": init_dense(ks[1], (cfg.conv_width, conv_dim), dt, scale=0.5),
+        "A_log": jnp.zeros((H,), jnp.float32) + np.log(np.arange(1, H + 1, dtype=np.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dt),
+        "w_out": init_dense(ks[2], (d_inner, D), dt),
+    }
+    specs = {
+        "w_in": ("embed", "ff"),
+        "conv_w": (None, "ff"),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D_skip": (None,),
+        "norm": ("ff",),
+        "w_out": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def _split_proj(p, cfg, x):
+    H, P, N, d_inner, conv_dim = _dims(cfg)
+    proj = x @ p["w_in"]
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, tail=None):
+    """Depthwise causal conv, width W.  xbc: (B,S,Cd).  tail: (B,W-1,Cd)."""
+    W = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out), xp[:, -(W - 1) :]
+
+
+def _segsum(a):
+    """log-decay matrix L[i,j] = Σ_{k=j+1..i} a_k (j<=i), -inf above diag.
+    a: (..., L)."""
+    Lc = a.shape[-1]
+    cums = jnp.cumsum(a, axis=-1)
+    diff = cums[..., :, None] - cums[..., None, :]  # (..., i, j) = sum(j+1..i)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(p, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence SSD.  u: (B, S, D) -> (B, S, D).  S % chunk == 0."""
+    H, P, N, d_inner, conv_dim = _dims(cfg)
+    B, S, D = u.shape
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:
+        raise ValueError(f"seq len {S} must be divisible by ssm_chunk {Q}")
+    z, xbc, dt_raw = _split_proj(p, cfg, u)
+    xbc, _ = _causal_conv(xbc, p["conv_w"])
+    xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    x = xh.reshape(B, S, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, S, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, S, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = dt * A  # (B,S,H) log decay
+
+    nc = S // Q
+    xc = x.reshape(B, nc, Q, H, P)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+    dtc = dt.reshape(B, nc, Q, H)
+    ac = a.reshape(B, nc, Q, H)
+
+    def chunk_step(h, inp):
+        xq, Bq, Cq, dtq, aq = inp  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H), (B,Q,H)
+        cum = jnp.cumsum(aq, axis=1)  # (B,Q,H)
+        # inter-chunk contribution: y_off[i] = C_i · (h * exp(cum_i))
+        y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", Cq, h, jnp.exp(cum))
+        # intra-chunk (dual quadratic form)
+        Lmat = jnp.exp(_segsum(jnp.swapaxes(aq, 1, 2)))  # (B,H,Q,Q)
+        CB = jnp.einsum("bqn,bsn->bqs", Cq, Bq)  # (B,Q,Q)
+        y_diag = jnp.einsum("bqs,bhqs,bsh,bshp->bqhp", CB, Lmat, dtq, xq)
+        # state passed to the next chunk
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bqn,bqh,bqhp->bhpn", Bq, dtq * decay_tail, xq
+        )
+        return h_new, y_off + y_diag
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (
+        jnp.swapaxes(xc, 0, 1),
+        jnp.swapaxes(Bc, 0, 1),
+        jnp.swapaxes(Cc, 0, 1),
+        jnp.swapaxes(dtc, 0, 1),
+        jnp.swapaxes(ac, 0, 1),
+    )
+    _, yc = jax.lax.scan(chunk_step, h0, xs)  # (nc, B, Q, H, P)
+    y = jnp.swapaxes(yc, 0, 1).reshape(B, S, H, P)
+    y = y + x * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(u.dtype)
+    # gated RMSNorm (mamba2 uses norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    from .common import rmsnorm
+
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int) -> SSDState:
+    H, P, N, d_inner, conv_dim = _dims(cfg)
+    return SSDState(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32),
+    )
+
+
+def ssd_decode_step(p, cfg: ModelConfig, u: jax.Array, state: SSDState):
+    """One token: u (B, 1, D) -> (B, 1, D), updated state.  O(1) in context."""
+    H, P, N, d_inner, conv_dim = _dims(cfg)
+    B = u.shape[0]
+    z, xbc, dt_raw = _split_proj(p, cfg, u)
+    xbc_act, new_tail = _causal_conv(xbc, p["conv_w"], tail=state.conv.astype(xbc.dtype))
+    xh, Bm, Cm = jnp.split(xbc_act[:, 0], [d_inner, d_inner + N], axis=-1)
+    x = xh.reshape(B, H, P).astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B,H)
+    h = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm, dt, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + x * p["D_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    from .common import rmsnorm
+
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["w_out"], SSDState(h=h, conv=new_tail.astype(jnp.float32))

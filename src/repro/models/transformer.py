@@ -1,0 +1,433 @@
+"""Model assembly for the assigned-architecture pool.
+
+One code path covers all ten architectures through ``ModelConfig``:
+  * dense / MoE decoder-only LMs (qwen3, yi, phi3, qwen2.5, mixtral,
+    llama4-scout, qwen2-vl),
+  * attention-free SSM (mamba2),
+  * hybrid RG-LRU + local attention (recurrentgemma),
+  * encoder-decoder (whisper; conv frontend stubbed to frame embeddings).
+
+Layers are stacked and driven by ``lax.scan`` (MaxText-style): O(1) HLO in
+depth, which keeps 512-device dry-run compiles tractable.  Heterogeneous
+stacks (recurrentgemma's r,r,a pattern) scan over *groups*; a remainder
+partial group is applied unscanned.
+
+Params are nested dicts; a parallel `specs` tree holds logical axis names
+consumed by ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    KVCache,
+    attention,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+)
+from .common import ModelConfig, constrain_batch, init_dense, rmsnorm, sinusoidal_positions
+from .moe import init_mlp, init_moe, mlp, moe
+from .rglru import (
+    RGLRUState,
+    init_rglru_block,
+    init_rglru_state,
+    rglru_decode_step,
+    rglru_forward,
+)
+from .ssm import SSDState, init_ssd, init_ssd_state, ssd_decode_step, ssd_forward
+
+__all__ = [
+    "init_params",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+    "loss_fn",
+]
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "a":
+        p_attn, s_attn = init_attention(ks[0], cfg)
+        if cfg.n_experts > 0:
+            p_ff, s_ff = init_moe(ks[1], cfg)
+        else:
+            p_ff, s_ff = init_mlp(ks[1], cfg)
+        params = {"ln1": jnp.zeros((D,), dt), "attn": p_attn, "ln2": jnp.zeros((D,), dt), "ff": p_ff}
+        specs = {"ln1": ("embed",), "attn": s_attn, "ln2": ("embed",), "ff": s_ff}
+        if cross:
+            p_x, s_x = init_attention(ks[2], cfg, cross=True)
+            params["ln_x"] = jnp.zeros((D,), dt)
+            params["xattn"] = p_x
+            specs["ln_x"] = ("embed",)
+            specs["xattn"] = s_x
+        return params, specs
+    if kind == "r":
+        p_rec, s_rec = init_rglru_block(ks[0], cfg)
+        p_ff, s_ff = init_mlp(ks[1], cfg)
+        return (
+            {"ln1": jnp.zeros((D,), dt), "rec": p_rec, "ln2": jnp.zeros((D,), dt), "ff": p_ff},
+            {"ln1": ("embed",), "rec": s_rec, "ln2": ("embed",), "ff": s_ff},
+        )
+    if kind == "s":
+        p_ssd, s_ssd = init_ssd(ks[0], cfg)
+        return (
+            {"ln1": jnp.zeros((D,), dt), "ssd": p_ssd},
+            {"ln1": ("embed",), "ssd": s_ssd},
+        )
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _pattern_groups(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.block_pattern
+    return cfg.n_layers // len(pat), tuple(pat[: cfg.n_layers % len(pat)])
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, specs).  Stacked block params have a leading 'layers'
+    axis (scanned)."""
+    n_groups, remainder = _pattern_groups(cfg)
+    keys = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    D, V = cfg.d_model, cfg.vocab
+
+    def stack_init(key, kinds, n, cross=False):
+        """Stack n group-param trees (one subkey each)."""
+        def one(k):
+            gk = jax.random.split(k, len(kinds))
+            return {
+                f"{kind}{j}": _init_block(gk[j], cfg, kind, cross=cross)[0]
+                for j, kind in enumerate(kinds)
+            }
+
+        stacked = jax.vmap(one)(jax.random.split(key, n))
+        specs = {}
+        for j, kind in enumerate(kinds):
+            _, s = _init_block(key, cfg, kind, cross=cross)
+            specs[f"{kind}{j}"] = jax.tree.map(
+                lambda ax: ("layers",) + ax, s, is_leaf=lambda x: isinstance(x, tuple)
+            )
+        return stacked, specs
+
+    V = cfg.vocab_padded  # padded for TP divisibility; loss masks the padding
+    params: Dict[str, Any] = {"embed": init_dense(keys[0], (V, D), dt, scale=1.0)}
+    specs: Dict[str, Any] = {"embed": ("vocab", "embed")}
+
+    if cfg.kind == "encdec":
+        enc_stack, enc_specs = stack_init(keys[1], ("a",), cfg.n_enc_layers)
+        dec_stack, dec_specs = stack_init(keys[2], ("a",), cfg.n_layers, cross=True)
+        params.update(enc_blocks=enc_stack, dec_blocks=dec_stack)
+        specs.update(enc_blocks=enc_specs, dec_blocks=dec_specs)
+        params["enc_norm"] = jnp.zeros((D,), dt)
+        specs["enc_norm"] = ("embed",)
+    else:
+        blocks, block_specs = stack_init(keys[1], cfg.block_pattern, n_groups)
+        params["blocks"] = blocks
+        specs["blocks"] = block_specs
+        if remainder:
+            rem, rem_specs = {}, {}
+            for j, kind in enumerate(remainder):
+                rem[f"{kind}{j}"], rem_specs[f"{kind}{j}"] = _init_block(
+                    jax.random.fold_in(keys[2], j), cfg, kind
+                )
+            params["tail_blocks"] = rem
+            specs["tail_blocks"] = rem_specs
+
+    params["final_norm"] = jnp.zeros((D,), dt)
+    specs["final_norm"] = ("embed",)
+    params["lm_head"] = init_dense(keys[3], (D, V), dt)
+    specs["lm_head"] = ("embed", "vocab")
+    if cfg.n_patches > 0:  # VLM early-fusion projection for patch stubs
+        params["patch_proj"] = init_dense(keys[4], (D, D), dt)
+        specs["patch_proj"] = ("embed", "embed2")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# training / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(bp, cfg: ModelConfig, kind: str, x, positions, *, causal=True, use_rope=True,
+                 enc_out=None, stats_acc=None):
+    if kind == "a":
+        x = x + attention(bp["attn"], cfg, rmsnorm(x, bp["ln1"], cfg.norm_eps), positions,
+                          causal=causal, use_rope=use_rope)
+        if enc_out is not None:
+            x = x + attention(bp["xattn"], cfg, rmsnorm(x, bp["ln_x"], cfg.norm_eps), positions,
+                              x_kv=enc_out, use_rope=False)
+        h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            out, stats = moe(bp["ff"], cfg, h)
+            if stats_acc is not None:
+                stats_acc["aux_loss"] = stats_acc.get("aux_loss", 0.0) + stats["aux_loss"]
+                stats_acc["tokens_per_expert"] = (
+                    stats_acc.get("tokens_per_expert", 0.0) + stats["tokens_per_expert"]
+                )
+                stats_acc["slots_filled"] = (
+                    stats_acc.get("slots_filled", 0.0) + stats["slots_filled"]
+                )
+            x = x + out
+        else:
+            x = x + mlp(bp["ff"], cfg, h)
+    elif kind == "r":
+        x = x + rglru_forward(bp["rec"], cfg, rmsnorm(x, bp["ln1"], cfg.norm_eps))
+        x = x + mlp(bp["ff"], cfg, rmsnorm(x, bp["ln2"], cfg.norm_eps))
+    elif kind == "s":
+        x = x + ssd_forward(bp["ssd"], cfg, rmsnorm(x, bp["ln1"], cfg.norm_eps))
+    return x
+
+
+def _run_stack(stacked, cfg: ModelConfig, kinds, x, positions, *, causal=True,
+               use_rope=True, enc_out=None):
+    """lax.scan over stacked groups; accumulates MoE stats."""
+    E = cfg.n_experts
+    stats0 = {
+        "aux_loss": jnp.zeros((), jnp.float32),
+        "tokens_per_expert": jnp.zeros((E,), jnp.float32),
+        "slots_filled": jnp.zeros((E,), jnp.float32),
+    } if E > 0 else {}
+
+    def body(carry, gp):
+        x, stats = carry
+        x = constrain_batch(x)
+        acc = dict(stats) if stats else None
+        for j, kind in enumerate(kinds):
+            x = _apply_block(gp[f"{kind}{j}"], cfg, kind, x, positions, causal=causal,
+                             use_rope=use_rope, enc_out=enc_out, stats_acc=acc)
+        return (x, acc if acc is not None else stats), None
+
+    # Per-layer remat: the scan stores only the (B,S,D) boundary activation
+    # per group and recomputes block interiors in the backward pass — without
+    # this, differentiating the scan stores every block's attention residuals
+    # (measured: ~8x temp memory on train_4k cells).
+    body = jax.checkpoint(body, prevent_cse=False)
+    (x, stats), _ = jax.lax.scan(body, (x, stats0), stacked)
+    return x, stats
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    tokens = batch["tokens"]
+    x = constrain_batch(params["embed"][tokens].astype(cfg.param_dtype))
+    if cfg.n_patches > 0 and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.param_dtype) @ params["patch_proj"]
+        n_p = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n_p:]], axis=1)  # early fusion
+    return x
+
+
+def forward_train(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                  return_hidden: bool = False):
+    """Teacher-forced forward.  Returns (logits, aux_stats) — or the
+    pre-final-norm hidden states when ``return_hidden`` (prefill path)."""
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.kind == "encdec":
+        audio = batch["audio_embed"].astype(cfg.param_dtype)
+        enc_pos = jnp.asarray(sinusoidal_positions(audio.shape[1], cfg.d_model), cfg.param_dtype)
+        enc_x = audio + enc_pos
+        enc_x, _ = _run_stack(params["enc_blocks"], cfg, ("a",), enc_x, positions,
+                              causal=False, use_rope=False)
+        enc_out = rmsnorm(enc_x, params["enc_norm"], cfg.norm_eps)
+        dec_pos = jnp.asarray(sinusoidal_positions(S, cfg.d_model), cfg.param_dtype)
+        x = params["embed"][batch["tokens"]].astype(cfg.param_dtype) + dec_pos
+        x, stats = _run_stack(params["dec_blocks"], cfg, ("a",), x, positions,
+                              causal=True, use_rope=False, enc_out=enc_out)
+    else:
+        x = _embed_inputs(params, cfg, batch)
+        x, stats = _run_stack(params["blocks"], cfg, cfg.block_pattern, x, positions)
+        if "tail_blocks" in params:
+            _, remainder = _pattern_groups(cfg)
+            for j, kind in enumerate(remainder):
+                x = _apply_block(params["tail_blocks"][f"{kind}{j}"], cfg, kind, x, positions)
+    if return_hidden:
+        return x, stats
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, stats
+
+
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    logits, stats = forward_train(params, cfg, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:  # mask padded vocab columns
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"ce_loss": loss, "n_tokens": mask.sum()}
+    if stats:
+        loss = loss + aux_weight * stats["aux_loss"]
+        metrics.update(
+            moe_aux_loss=stats["aux_loss"],
+            tokens_per_expert=stats["tokens_per_expert"],
+            slots_filled=stats["slots_filled"],
+        )
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serving) path
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    caches: Any  # pytree of stacked per-group block states
+    tail: Any  # states for remainder blocks (or None)
+    enc_out: Optional[jax.Array]  # encoder output (encdec only)
+    position: jax.Array  # scalar i32
+
+
+def _init_block_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int, cross: bool,
+                      filled: bool = True):
+    if kind == "a":
+        st = {"kv": init_kv_cache(cfg, batch, seq_len, filled=filled)}
+        if cross:
+            # cross K/V are computed from enc_out at prefill; store here
+            st["xk"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), jnp.bfloat16)
+            st["xv"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), jnp.bfloat16)
+        return st
+    if kind == "r":
+        return {"rg": init_rglru_state(cfg, batch)}
+    if kind == "s":
+        return {"ssd": init_ssd_state(cfg, batch)}
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int, filled: bool = True) -> DecodeState:
+    """Decode state with caches sized for `seq_len` context.  ``filled=True``
+    builds the decode-benchmark state (caches holding seq_len prior tokens);
+    ``filled=False`` starts generation from scratch."""
+    n_groups, remainder = _pattern_groups(cfg)
+    cross = cfg.kind == "encdec"
+    kinds = ("a",) if cross else cfg.block_pattern
+    n = cfg.n_layers if cross else n_groups
+
+    def one_group(_):
+        return {
+            f"{kind}{j}": _init_block_state(cfg, kind, batch, seq_len, cross, filled=filled)
+            for j, kind in enumerate(kinds)
+        }
+
+    caches = jax.vmap(one_group)(jnp.arange(n))
+    tail = (
+        {
+            f"{kind}{j}": _init_block_state(cfg, kind, batch, seq_len, False, filled=filled)
+            for j, kind in enumerate(remainder)
+        }
+        if (remainder and not cross)
+        else None
+    )
+    enc_out = (
+        jnp.zeros((batch, cfg.enc_seq, cfg.d_model), cfg.param_dtype) if cross else None
+    )
+    return DecodeState(
+        caches=caches,
+        tail=tail,
+        enc_out=enc_out,
+        position=jnp.asarray(seq_len if filled else 0, jnp.int32),
+    )
+
+
+def _decode_block(bp, cfg: ModelConfig, kind: str, x, st, cross: bool):
+    new_st = dict(st)
+    if kind == "a":
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        out, new_kv = decode_attention(bp["attn"], cfg, h, st["kv"])
+        x = x + out
+        if cross:
+            hx = rmsnorm(x, bp["ln_x"], cfg.norm_eps)
+            out_x, _ = decode_attention(
+                bp["xattn"], cfg, hx, st["kv"], cross_kv=(st["xk"], st["xv"])
+            )
+            x = x + out_x
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            out2, _ = moe(bp["ff"], cfg, h2)
+            x = x + out2
+        else:
+            x = x + mlp(bp["ff"], cfg, h2)
+        new_st["kv"] = new_kv
+    elif kind == "r":
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        out, new_rg = rglru_decode_step(bp["rec"], cfg, h, st["rg"])
+        x = x + out
+        x = x + mlp(bp["ff"], cfg, rmsnorm(x, bp["ln2"], cfg.norm_eps))
+        new_st["rg"] = new_rg
+    elif kind == "s":
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        out, new_ssd = ssd_decode_step(bp["ssd"], cfg, h, st["ssd"])
+        x = x + out
+        new_st["ssd"] = new_ssd
+    return x, new_st
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, state: DecodeState):
+    """One serving step: next-token logits for `token` (B, 1) given caches."""
+    cross = cfg.kind == "encdec"
+    kinds = ("a",) if cross else cfg.block_pattern
+    x = params["embed"][token].astype(cfg.param_dtype)
+    if cross:
+        cap = state.caches["a0"]["kv"].k.shape[2]  # (n_layers, B, T, K, hd)
+        pos_table = jnp.asarray(
+            sinusoidal_positions(cap + 1, cfg.d_model), cfg.param_dtype
+        )
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pos_table, jnp.minimum(state.position, pos_table.shape[0] - 1), 1, axis=0
+        )
+
+    stacked = params["dec_blocks"] if cross else params["blocks"]
+
+    def body(x, inp):
+        gp, st = inp
+        new_sts = {}
+        for j, kind in enumerate(kinds):
+            x, new_sts[f"{kind}{j}"] = _decode_block(
+                gp[f"{kind}{j}"], cfg, kind, x, st[f"{kind}{j}"], cross
+            )
+        return x, new_sts
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, state.caches))
+
+    new_tail = state.tail
+    if state.tail is not None:
+        _, remainder = _pattern_groups(cfg)
+        new_tail = {}
+        for j, kind in enumerate(remainder):
+            x, new_tail[f"{kind}{j}"] = _decode_block(
+                params["tail_blocks"][f"{kind}{j}"], cfg, kind, x, state.tail[f"{kind}{j}"], False
+            )
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    new_state = DecodeState(
+        caches=new_caches, tail=new_tail, enc_out=state.enc_out, position=state.position + 1
+    )
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Prefill benchmark path: full-sequence forward; the LM head runs on the
+    last position only (materializing (B, S, V) logits at 32k would waste
+    memory and flops — the slice is taken *before* the head)."""
+    hidden, _ = forward_train(params, cfg, batch, return_hidden=True)
+    last = rmsnorm(hidden[:, -1], params["final_norm"], cfg.norm_eps)
+    return last @ params["lm_head"]

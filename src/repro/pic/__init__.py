@@ -1,0 +1,34 @@
+"""2D3V electromagnetic particle-in-cell substrate (the paper's application).
+
+Normalized plasma units throughout: c = 1, electron charge magnitude = 1,
+electron mass = 1, reference density n0 such that the electron plasma
+frequency ω_pe(n0) = 1.  Lengths are in electron skin depths c/ω_pe, times
+in 1/ω_pe, E in m_e·c·ω_pe/q_e, B in m_e·ω_pe/q_e.
+"""
+from .grid import Grid2D
+from .fields import Fields, step_e, step_b_half
+from .particles import Particles, boris_push, gather_fields, advance_positions
+from .deposition import deposit_current, box_work_counters
+from .boxes import BoxDecomposition
+from .laser import LaserAntenna
+from .problem import laser_ion_problem, uniform_plasma_problem
+from .stepper import Simulation, SimConfig
+
+__all__ = [
+    "Grid2D",
+    "Fields",
+    "step_e",
+    "step_b_half",
+    "Particles",
+    "boris_push",
+    "gather_fields",
+    "advance_positions",
+    "deposit_current",
+    "box_work_counters",
+    "BoxDecomposition",
+    "LaserAntenna",
+    "laser_ion_problem",
+    "uniform_plasma_problem",
+    "Simulation",
+    "SimConfig",
+]

@@ -1,0 +1,101 @@
+"""FDTD Maxwell solver on the 2D Yee grid (normalized units, c = 1).
+
+Leapfrog scheme (as WarpX's finite-difference solver):
+
+    B^{n-1/2} -> B^n        (half step, used for the particle push)
+    E^n       -> E^{n+1}    (full step, with deposited J^{n+1/2})
+    B^n       -> B^{n+1/2}  (half step)
+
+Boundaries: periodic differences (jnp.roll) + an absorbing sponge layer that
+exponentially damps the fields in a boundary shell — a standard cheap stand-in
+for a PML, adequate for load-balance studies.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .grid import Grid2D
+
+__all__ = ["Fields", "step_b_half", "step_e", "make_sponge", "field_energy"]
+
+
+class Fields(NamedTuple):
+    """All six field components, each of shape (nz, nx)."""
+
+    ex: jax.Array
+    ey: jax.Array
+    ez: jax.Array
+    bx: jax.Array
+    by: jax.Array
+    bz: jax.Array
+
+    @classmethod
+    def zeros(cls, grid: Grid2D, dtype=jnp.float32) -> "Fields":
+        z = jnp.zeros(grid.shape, dtype=dtype)
+        return cls(z, z, z, z, z, z)
+
+
+def _ddz_fwd(f: jax.Array, dz: float) -> jax.Array:
+    """Forward difference along z: result staggered +1/2 in z."""
+    return (jnp.roll(f, -1, axis=0) - f) / dz
+
+
+def _ddz_bwd(f: jax.Array, dz: float) -> jax.Array:
+    """Backward difference along z: result staggered -1/2 in z."""
+    return (f - jnp.roll(f, 1, axis=0)) / dz
+
+
+def _ddx_fwd(f: jax.Array, dx: float) -> jax.Array:
+    return (jnp.roll(f, -1, axis=1) - f) / dx
+
+
+def _ddx_bwd(f: jax.Array, dx: float) -> jax.Array:
+    return (f - jnp.roll(f, 1, axis=1)) / dx
+
+
+def step_b_half(f: Fields, grid: Grid2D) -> Fields:
+    """Advance B by dt/2:  ∂B/∂t = -∇xE  (∂/∂y = 0)."""
+    hdt = 0.5 * grid.dt
+    bx = f.bx + hdt * _ddz_fwd(f.ey, grid.dz)
+    by = f.by - hdt * (_ddz_fwd(f.ex, grid.dz) - _ddx_fwd(f.ez, grid.dx))
+    bz = f.bz - hdt * _ddx_fwd(f.ey, grid.dx)
+    return f._replace(bx=bx, by=by, bz=bz)
+
+
+def step_e(f: Fields, j, grid: Grid2D) -> Fields:
+    """Advance E by dt:  ∂E/∂t = ∇xB - J  (c = 1, ε0 = 1)."""
+    dt = grid.dt
+    jx, jy, jz = j
+    ex = f.ex + dt * (-_ddz_bwd(f.by, grid.dz) - jx)
+    ey = f.ey + dt * (_ddz_bwd(f.bx, grid.dz) - _ddx_bwd(f.bz, grid.dx) - jy)
+    ez = f.ez + dt * (_ddx_bwd(f.by, grid.dx) - jz)
+    return f._replace(ex=ex, ey=ey, ez=ez)
+
+
+def make_sponge(grid: Grid2D, width_cells: int = 8, strength: float = 0.2) -> jax.Array:
+    """Multiplicative damping mask, 1 in the interior, decaying toward the
+    boundary over `width_cells` cells (applied to all components each step)."""
+    if width_cells <= 0:
+        return jnp.ones(grid.shape, dtype=jnp.float32)
+    iz = jnp.arange(grid.nz)
+    ix = jnp.arange(grid.nx)
+    edge_z = jnp.minimum(iz, grid.nz - 1 - iz)
+    edge_x = jnp.minimum(ix, grid.nx - 1 - ix)
+    dist = jnp.minimum(edge_z[:, None], edge_x[None, :]).astype(jnp.float32)
+    ramp = jnp.clip(dist / width_cells, 0.0, 1.0)
+    # damping factor per step: 1 in interior, (1 - strength) at the very edge
+    return 1.0 - strength * (1.0 - ramp) ** 2
+
+
+def apply_sponge(f: Fields, sponge: jax.Array) -> Fields:
+    return Fields(*(c * sponge for c in f))
+
+
+def field_energy(f: Fields, grid: Grid2D) -> jax.Array:
+    """Total EM energy  (1/2)∫(E² + B²) dV  in normalized units."""
+    dv = grid.dz * grid.dx
+    total = sum(jnp.sum(c.astype(jnp.float32) ** 2) for c in f)
+    return 0.5 * total * dv

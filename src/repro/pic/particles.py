@@ -1,0 +1,130 @@
+"""Particles: storage, staggered field gather, Boris push (normalized units).
+
+Momentum u = γv (c = 1).  Each species carries charge q and mass m in units
+of the electron charge magnitude / electron mass.  Static-shape storage with
+an `alive` mask (JAX requires fixed shapes); dead particles have weight
+effectively zero everywhere via the mask.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .fields import Fields
+from .grid import Grid2D, STAGGER
+from .shapes import shape_weights
+
+__all__ = [
+    "Particles",
+    "gather_fields",
+    "boris_push",
+    "advance_positions",
+    "kinetic_energy",
+]
+
+
+class Particles(NamedTuple):
+    """One species' particles (fixed capacity)."""
+
+    z: jax.Array  # (N,) position along z
+    x: jax.Array  # (N,) position along x
+    ux: jax.Array  # (N,) γ vx
+    uy: jax.Array
+    uz: jax.Array
+    w: jax.Array  # (N,) macro-particle weight (real particles per marker)
+    alive: jax.Array  # (N,) bool
+    q: jax.Array  # scalar charge (units of e); jnp scalar for pytree friendliness
+    m: jax.Array  # scalar mass (units of m_e)
+
+    @property
+    def n(self) -> int:
+        return self.z.shape[0]
+
+    def gamma(self) -> jax.Array:
+        return jnp.sqrt(1.0 + self.ux**2 + self.uy**2 + self.uz**2)
+
+
+def _interp_component(field: jax.Array, comp: str, z, x, grid: Grid2D, order: int) -> jax.Array:
+    """Gather one staggered field component to particle positions."""
+    off_z, off_x = STAGGER[comp]
+    iz, wz = shape_weights(z, grid.dz, off_z, order)
+    ix, wx = shape_weights(x, grid.dx, off_x, order)
+    npts = wz.shape[-1]
+    izk = (iz[:, None] + jnp.arange(npts)[None, :]) % grid.nz  # (N, n+1)
+    ixk = (ix[:, None] + jnp.arange(npts)[None, :]) % grid.nx
+    # (N, n+1, n+1) gather then weighted sum
+    vals = field[izk[:, :, None], ixk[:, None, :]]
+    return jnp.einsum("pij,pi,pj->p", vals, wz, wx)
+
+
+def gather_fields(
+    f: Fields, z: jax.Array, x: jax.Array, grid: Grid2D, order: int = 3
+) -> Tuple[jax.Array, ...]:
+    """Interpolate all six components to particle positions (staggering-aware)."""
+    ex = _interp_component(f.ex, "ex", z, x, grid, order)
+    ey = _interp_component(f.ey, "ey", z, x, grid, order)
+    ez = _interp_component(f.ez, "ez", z, x, grid, order)
+    bx = _interp_component(f.bx, "bx", z, x, grid, order)
+    by = _interp_component(f.by, "by", z, x, grid, order)
+    bz = _interp_component(f.bz, "bz", z, x, grid, order)
+    return ex, ey, ez, bx, by, bz
+
+
+def boris_push(p: Particles, e_b, dt: float) -> Particles:
+    """Standard relativistic Boris rotation (volume-preserving, exactly
+    energy-conserving in pure magnetic fields)."""
+    ex, ey, ez, bx, by, bz = e_b
+    qmdt2 = (p.q / p.m) * dt * 0.5
+
+    # half electric kick
+    umx = p.ux + qmdt2 * ex
+    umy = p.uy + qmdt2 * ey
+    umz = p.uz + qmdt2 * ez
+
+    gamma_m = jnp.sqrt(1.0 + umx**2 + umy**2 + umz**2)
+    tx, ty, tz = (qmdt2 / gamma_m * b for b in (bx, by, bz))
+    t2 = tx**2 + ty**2 + tz**2
+
+    # u' = u- + u- x t
+    upx = umx + (umy * tz - umz * ty)
+    upy = umy + (umz * tx - umx * tz)
+    upz = umz + (umx * ty - umy * tx)
+
+    s = 2.0 / (1.0 + t2)
+    # u+ = u- + u' x (s t)
+    uplx = umx + s * (upy * tz - upz * ty)
+    uply = umy + s * (upz * tx - upx * tz)
+    uplz = umz + s * (upx * ty - upy * tx)
+
+    # half electric kick
+    ux = uplx + qmdt2 * ex
+    uy = uply + qmdt2 * ey
+    uz = uplz + qmdt2 * ez
+
+    keep = p.alive
+    return p._replace(
+        ux=jnp.where(keep, ux, p.ux),
+        uy=jnp.where(keep, uy, p.uy),
+        uz=jnp.where(keep, uz, p.uz),
+    )
+
+
+def advance_positions(p: Particles, grid: Grid2D, dt: float) -> Particles:
+    """x^{n+1} = x^n + dt * u/γ; kill particles leaving the physical domain."""
+    gamma = p.gamma()
+    z = p.z + dt * p.uz / gamma
+    x = p.x + dt * p.ux / gamma
+    inside = (z >= 0.0) & (z < grid.lz) & (x >= 0.0) & (x < grid.lx)
+    alive = p.alive & inside
+    return p._replace(
+        z=jnp.where(p.alive, z, p.z),
+        x=jnp.where(p.alive, x, p.x),
+        alive=alive,
+    )
+
+
+def kinetic_energy(p: Particles) -> jax.Array:
+    """Σ w m (γ - 1) over alive particles."""
+    return jnp.sum(jnp.where(p.alive, p.w * p.m * (p.gamma() - 1.0), 0.0))

@@ -1,0 +1,68 @@
+"""Particle shape factors (B-spline weights) for gather and deposition.
+
+WarpX's fiducial runs (and the paper's) use third-order particle shapes;
+order 1 (cloud-in-cell) is provided for tests and cheap runs.  For spline
+order n a particle contributes to n+1 grid points per dimension.
+
+All functions are vectorized over particles and jit-safe.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["shape_weights", "SUPPORT"]
+
+SUPPORT = {1: 2, 3: 4}
+
+
+def _linear_weights(frac: jax.Array) -> jax.Array:
+    """Order-1 (CIC): weights at offsets [0, 1] from the base index."""
+    return jnp.stack([1.0 - frac, frac], axis=-1)
+
+
+def _cubic_bspline(x: jax.Array) -> jax.Array:
+    """Cubic B-spline S3 evaluated at |x| <= 2."""
+    ax = jnp.abs(x)
+    inner = 2.0 / 3.0 - ax**2 + 0.5 * ax**3
+    outer = (2.0 - ax) ** 3 / 6.0
+    return jnp.where(ax <= 1.0, inner, jnp.where(ax <= 2.0, outer, 0.0))
+
+
+def _cubic_weights(frac: jax.Array) -> jax.Array:
+    """Order-3: weights at offsets [0, 1, 2, 3] from base index i0=floor(s)-1.
+
+    The particle sits at fractional position `frac` in [0,1) relative to
+    floor(s); grid points are at distances (frac+1, frac, 1-frac, 2-frac).
+    """
+    d = jnp.stack([frac + 1.0, frac, 1.0 - frac, 2.0 - frac], axis=-1)
+    return _cubic_bspline(d)
+
+
+def shape_weights(
+    pos: jax.Array, spacing: float, offset: float, order: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Base grid index and weights for particles at physical positions `pos`.
+
+    Parameters
+    ----------
+    pos:      particle coordinates along one axis, shape (N,).
+    spacing:  grid spacing along that axis.
+    offset:   staggering of the target grid quantity (0 or 0.5 cells).
+    order:    spline order (1 or 3).
+
+    Returns
+    -------
+    i0:       int32 base index, shape (N,).
+    weights:  shape (N, order+1); weights sum to 1 (B-spline partition of unity).
+    """
+    if order not in SUPPORT:
+        raise ValueError(f"unsupported shape order {order}; expected 1 or 3")
+    s = pos / spacing - offset
+    i_floor = jnp.floor(s)
+    frac = s - i_floor
+    if order == 1:
+        return i_floor.astype(jnp.int32), _linear_weights(frac)
+    return (i_floor - 1).astype(jnp.int32), _cubic_weights(frac)

@@ -1,0 +1,2 @@
+"""Training/serving substrate: AdamW, gradient compression, microbatched
+train step, KV-cache serve step."""

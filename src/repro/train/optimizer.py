@@ -1,0 +1,138 @@
+"""AdamW with global-norm clipping + int8 gradient compression (error
+feedback) for slow-link (cross-pod) gradient synchronization.
+
+Params stay in their model dtype (bf16); first/second moments are f32; the
+update is computed in f32 and cast back — the standard mixed-precision
+recipe.  Compression quantizes per-leaf to int8 with a f32 scale and keeps
+the quantization residual as error-feedback state (Seide et al. 2014 /
+1-bit-Adam lineage), so compressed sync stays unbiased over time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "quantize_int8",
+    "dequantize_int8",
+    "compress_decompress",
+]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    error_feedback: Optional[Any] = None  # residuals when compression is on
+
+
+def adamw_init(params, *, compression: bool = False) -> AdamWState:
+    zeros_f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros_f32, params),
+        v=jax.tree.map(zeros_f32, params),
+        error_feedback=jax.tree.map(zeros_f32, params) if compression else None,
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# int8 compression with error feedback
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, error_feedback):
+    """Simulate the compressed gradient link: returns (decompressed grads,
+    new error feedback).  On a real multi-pod mesh the int8 payload is what
+    crosses the pod axis (4x fewer bytes than f32 — see §Perf)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_feedback)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_e = jax.tree.unflatten(tree, [o[1] for o in out])
+    return new_g, new_e
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    compression: bool = False,
+):
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    if compression:
+        if state.error_feedback is None:
+            raise ValueError("optimizer state was not initialized with compression=True")
+        grads, new_ef = compress_decompress(grads, state.error_feedback)
+    else:
+        new_ef = state.error_feedback
+
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_state = AdamWState(
+        step=step,
+        m=jax.tree.unflatten(tree, [o[1] for o in out]),
+        v=jax.tree.unflatten(tree, [o[2] for o in out]),
+        error_feedback=new_ef,
+    )
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,53 @@
+"""Serve-step factories: prefill and single-token decode with KV caches.
+
+``make_serve_step`` returns the function lowered for the ``decode_*`` /
+``long_*`` benchmark shapes: one new token given a cache holding ``seq_len``
+prior context.  ``make_prefill_step`` covers ``prefill_*`` shapes.
+
+Serving-level DLB (DESIGN.md §4): ``RequestBalancer`` treats request
+*buckets* as work items — measured per-bucket decode/prefill times feed the
+paper's LoadBalancer to assign buckets to data-parallel replicas.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import LoadBalancer
+from ..models import ModelConfig, decode_step, init_decode_state, prefill
+
+__all__ = ["make_serve_step", "make_prefill_step", "RequestBalancer"]
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, state):
+        logits, new_state = decode_step(params, cfg, token, state)
+        next_token = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+        return next_token, new_state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+class RequestBalancer:
+    """The paper's DLB applied to serving: buckets of requests are 'boxes',
+    measured per-bucket step time is the in-situ cost, replicas are devices."""
+
+    def __init__(self, n_replicas: int, interval: int = 10, threshold: float = 0.10):
+        self.lb = LoadBalancer(
+            n_devices=n_replicas, interval=interval, improvement_threshold=threshold
+        )
+
+    def assign(self, step: int, bucket_costs: np.ndarray) -> np.ndarray:
+        self.lb.ensure_mapping(len(bucket_costs))
+        new = self.lb.step(step, bucket_costs)
+        return self.lb.mapping if new is None else new

@@ -1,0 +1,83 @@
+"""Train-step factory: remat + microbatched gradient accumulation + AdamW.
+
+``make_train_step(cfg, ...)`` returns a pure (state, batch) -> (state,
+metrics) function suitable for jit with in/out shardings from
+``repro.dist.sharding``.  The global batch is split into ``grad_accum``
+microbatches scanned sequentially (bounds activation memory at scale); the
+loss/grad forward is wrapped in ``jax.checkpoint`` (full remat) so the
+scan-over-layers carries only boundary residuals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, loss_fn
+from .optimizer import AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(params, *, compression: bool = False) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params, compression=compression))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    grad_accum: int = 1,
+    lr: float = 3e-4,
+    remat: bool = False,
+    compression: bool = False,
+):
+    # NOTE: per-layer remat happens inside the model's scan-over-layers
+    # (models/transformer.py) — checkpointing the whole loss on top of that
+    # is counterproductive (it re-stores every scan residual); remat=True
+    # remains available for ablation.
+    loss = loss_fn
+    if remat:
+        loss = jax.checkpoint(loss_fn, static_argnums=(1,))
+
+    def microbatch_grads(params, batch):
+        return jax.value_and_grad(loss, has_aux=True)(params, cfg, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+        if grad_accum == 1:
+            (l, metrics), grads = microbatch_grads(params, batch)
+        else:
+            def split(x):
+                return x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = microbatch_grads(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, l_sum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            l = l_sum / grad_accum
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state.opt, lr=lr, compression=compression
+        )
+        out_metrics = {"loss": l, **opt_metrics}
+        for k in ("ce_loss", "moe_aux_loss"):
+            if isinstance(metrics, dict) and k in metrics:
+                out_metrics[k] = metrics[k]
+        return TrainState(params=new_params, opt=new_opt), out_metrics
+
+    return train_step

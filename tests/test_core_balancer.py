@@ -1,0 +1,262 @@
+"""Tests for the DLB loop (paper Lis. 2.1), efficiency (Eq. 1), perf model (Eq. 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ActivityLedger,
+    ActivityLedgerCost,
+    EMASmoother,
+    HeuristicCost,
+    LoadBalancer,
+    StrongScalingModel,
+    WorkCounterCost,
+    efficiency,
+    fit_strong_scaling,
+    predicted_max_speedup,
+    round_robin_mapping,
+)
+
+# ---------------------------------------------------------------------------
+# efficiency (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def test_efficiency_perfect_balance():
+    costs = np.ones(8)
+    mapping = np.arange(8) % 4
+    assert efficiency(costs, mapping, 4) == pytest.approx(1.0)
+
+
+def test_efficiency_paper_fig1_example():
+    """Fig. 1: rank 0 manages 30 particles, rank 1 none -> E = avg/max = 0.5."""
+    costs = np.array([18.0, 0.0, 0.0, 12.0])  # particles per box
+    mapping = np.array([0, 1, 1, 0])
+    assert efficiency(costs, mapping, 2) == pytest.approx(0.5)
+
+
+@given(
+    st.lists(st.floats(0, 1e6, allow_nan=False), min_size=1, max_size=40),
+    st.integers(1, 12),
+)
+@settings(max_examples=100, deadline=None)
+def test_efficiency_in_unit_interval(costs, n_devices):
+    costs = np.asarray(costs)
+    mapping = round_robin_mapping(len(costs), n_devices)
+    E = efficiency(costs, mapping, n_devices)
+    assert 0.0 <= E <= 1.0 + 1e-12
+
+
+def test_efficiency_zero_work():
+    assert efficiency(np.zeros(4), np.zeros(4, np.int64), 2) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# LoadBalancer gating (Lis. 2.1)
+# ---------------------------------------------------------------------------
+
+
+def make_imbalanced_costs(n_boxes=16, hot=4, seed=0):
+    """Hot boxes placed so the round-robin default maps them all to device 0
+    (adversarial to the cost-oblivious initial mapping, like a plasma target
+    concentrated in one corner of the domain)."""
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.5, 1.0, n_boxes)
+    costs[::4][:hot] *= 50.0
+    return costs
+
+
+def test_lb_adopts_on_first_imbalanced_round():
+    costs = make_imbalanced_costs()
+    lb = LoadBalancer(n_devices=4, interval=10)
+    new = lb.step(0, costs)
+    assert new is not None
+    assert lb.events[-1].adopted
+    assert lb.events[-1].proposed_efficiency > lb.events[-1].current_efficiency
+
+
+def test_lb_respects_interval():
+    costs = make_imbalanced_costs()
+    lb = LoadBalancer(n_devices=4, interval=10)
+    assert lb.step(3, costs) is None  # not an LB step
+    assert len(lb.events) == 0
+
+
+def test_lb_gate_blocks_marginal_improvement():
+    """Once balanced, re-proposing the same costs must NOT trigger adoption
+    (propEff ~ currEff fails the 10% gate) — the paper's key optimization."""
+    costs = make_imbalanced_costs()
+    lb = LoadBalancer(n_devices=4, interval=1)
+    assert lb.step(0, costs) is not None
+    assert lb.step(1, costs) is None
+    assert not lb.events[-1].adopted
+
+
+def test_lb_zero_threshold_always_adopts_improvements():
+    costs = make_imbalanced_costs()
+    lb = LoadBalancer(n_devices=4, interval=1, improvement_threshold=0.0)
+    assert lb.step(0, costs) is not None
+
+
+def test_lb_static_balances_once():
+    lb = LoadBalancer(n_devices=4, interval=1, static=True)
+    costs = make_imbalanced_costs()
+    assert lb.step(0, costs) is not None
+    # later drift: static LB never runs again
+    drifted = np.roll(costs, 7)
+    for s in range(1, 20):
+        assert lb.step(s, drifted) is None
+
+
+def test_lb_sfc_policy_requires_coords():
+    lb = LoadBalancer(n_devices=4, policy="sfc", interval=1)
+    with pytest.raises(ValueError):
+        lb.step(0, make_imbalanced_costs())
+
+
+def test_lb_sfc_policy_works_with_coords():
+    lb = LoadBalancer(n_devices=4, policy="sfc", interval=1)
+    coords = np.array([(i % 4, i // 4) for i in range(16)])
+    assert lb.step(0, make_imbalanced_costs(), box_coords=coords) is not None
+
+
+def test_lb_bytes_moved_accounting():
+    costs = make_imbalanced_costs()
+    box_bytes = np.full(16, 100.0)
+    lb = LoadBalancer(n_devices=4, interval=1)
+    lb.step(0, costs, box_bytes=box_bytes)
+    ev = lb.events[-1]
+    assert ev.adopted and ev.bytes_moved == pytest.approx(100.0 * ev.boxes_moved)
+
+
+def test_lb_elastic_resize_folds_lost_device():
+    lb = LoadBalancer(n_devices=4, interval=1)
+    costs = make_imbalanced_costs()
+    lb.step(0, costs)
+    lb.resize(3)  # device 3 failed
+    assert np.all(lb.mapping < 3)
+    new = lb.step(1, costs)  # rebalances onto 3 devices
+    assert new is not None and np.all(new < 3)
+
+
+@given(st.integers(2, 8), st.integers(0, 200))
+@settings(max_examples=50, deadline=None)
+def test_lb_deterministic_replicated_decision(n_devices, seed):
+    """SPMD requirement: identical inputs -> identical mapping on every host."""
+    costs = make_imbalanced_costs(seed=seed)
+    a = LoadBalancer(n_devices=n_devices, interval=1)
+    b = LoadBalancer(n_devices=n_devices, interval=1)
+    ma, mb = a.step(0, costs), b.step(0, costs)
+    if ma is None:
+        assert mb is None
+    else:
+        assert np.array_equal(ma, mb)
+
+
+# ---------------------------------------------------------------------------
+# cost measures
+# ---------------------------------------------------------------------------
+
+
+def test_heuristic_cost_paper_weights():
+    h = HeuristicCost()  # 0.75 / 0.25 Summit defaults
+    c = h.measure(n_particles=np.array([100.0, 0.0]), n_cells=np.array([64.0, 64.0]))
+    assert c[0] > c[1] > 0
+    assert c[1] == pytest.approx(0.25 * 64.0)
+    assert not h.hyperparameter_free
+
+
+def test_work_counter_cost_passthrough():
+    w = WorkCounterCost()
+    counters = np.array([10.0, 0.0, 5.0])
+    assert np.allclose(w.measure(work_counters=counters), counters)
+    assert w.hyperparameter_free
+
+
+def test_work_counter_rejects_negative():
+    with pytest.raises(ValueError):
+        WorkCounterCost().measure(work_counters=np.array([-1.0]))
+
+
+def test_activity_ledger_records_and_aggregates():
+    ledger = ActivityLedger(buffer_records=2)
+    delivered = []
+    ledger.register_callback(lambda batch: delivered.extend(batch))
+    ledger.record("deposit", box=0, start=0.0, end=0.5)
+    ledger.record("deposit", box=1, start=0.0, end=0.25)  # triggers flush
+    assert len(delivered) == 2 and ledger.n_flushes == 1
+    ledger.record("push", box=0, start=0.0, end=1.0)
+    durations = ledger.box_durations(2, kernel="deposit")
+    assert np.allclose(durations, [0.5, 0.25])
+    all_durations = ledger.box_durations(2)
+    assert np.allclose(all_durations, [1.5, 0.25])
+
+
+def test_activity_ledger_timed_context():
+    ledger = ActivityLedger()
+    with ledger.timed("k", box=3):
+        pass
+    d = ledger.box_durations(4, kernel="k")
+    assert d[3] > 0 and np.all(d[:3] == 0)
+
+
+def test_activity_ledger_cost_measure():
+    ledger = ActivityLedger()
+    ledger.record("deposit", 0, 0.0, 1.0)
+    m = ActivityLedgerCost(ledger=ledger, kernel="deposit")
+    c = m.measure(n_boxes=2)
+    assert np.allclose(c, [1.0, 0.0])
+    assert m.hyperparameter_free
+    # reset_after_measure drained the ledger
+    assert np.allclose(m.measure(n_boxes=2), [0.0, 0.0])
+
+
+def test_ema_smoother():
+    s = EMASmoother(alpha=0.5)
+    a = s.update(np.array([1.0, 0.0]))
+    assert np.allclose(a, [1.0, 0.0])
+    b = s.update(np.array([0.0, 1.0]))
+    assert np.allclose(b, [0.5, 0.5])
+
+
+def test_ema_alpha1_is_paper_behaviour():
+    s = EMASmoother(alpha=1.0)
+    s.update(np.array([1.0, 2.0]))
+    out = s.update(np.array([5.0, 6.0]))
+    assert np.allclose(out, [5.0, 6.0])
+
+
+# ---------------------------------------------------------------------------
+# performance model (Eq. 2, Figs. 7-8)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_strong_scaling_recovers_exponent():
+    nodes = np.array([6, 10, 18, 31, 72], dtype=float)
+    x_true, A_true = 0.91, 123.0
+    t = A_true * nodes**-x_true
+    x, A = fit_strong_scaling(nodes, t)
+    assert x == pytest.approx(x_true, abs=1e-9)
+    assert A == pytest.approx(A_true, rel=1e-9)
+
+
+def test_predicted_max_speedup_paper_numbers():
+    """Paper: c_max0/c_avg0 = 6.2 at 16 nodes, x = 0.91 (2D3V) -> ~5x max."""
+    E0 = 1.0 / 6.2
+    S = predicted_max_speedup(E0, 0.91)
+    assert S == pytest.approx(5.26, abs=0.05)  # paper quotes "5x"
+
+
+def test_strong_scaling_model_roundtrip():
+    m = StrongScalingModel.fit([1, 2, 4, 8], [100.0, 52.0, 27.0, 14.5])
+    assert 0.9 < m.x <= 1.0
+    assert m.walltime(1) == pytest.approx(m.A)
+    frac = m.attained_fraction(measured_speedup=3.8, initial_efficiency=1 / 6.2)
+    assert 0.5 < frac < 1.0
+
+
+def test_predicted_max_speedup_validates_inputs():
+    with pytest.raises(ValueError):
+        predicted_max_speedup(0.0, 0.9)
+    with pytest.raises(ValueError):
+        predicted_max_speedup(1.5, 0.9)

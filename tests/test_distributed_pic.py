@@ -1,0 +1,84 @@
+"""Real multi-device box runtime validation.
+
+The heavy test runs in a SUBPROCESS with XLA_FLAGS forcing 8 host devices
+(the main pytest process must keep seeing 1 device — per the assignment,
+only the dry-run entrypoint fakes device counts).  It checks:
+  * particles are conserved across box emigration,
+  * box state actually lives on 8 distinct devices per the mapping,
+  * DLB adoption moves boxes between devices,
+  * physics tracks the single-host reference simulation.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+
+from repro.dist.box_runtime import BoxRuntime
+from repro.pic import Simulation, SimConfig, laser_ion_problem
+
+problem = laser_ion_problem(nz=64, nx=64, box_cells=8, ppc=4, seed=0)  # 64 boxes
+rt = BoxRuntime(problem, n_devices=8, lb_interval=2)
+n0 = rt.total_alive()
+
+devices_used = set()
+for _ in range(6):
+    out = rt.step()
+    for sp in rt.boxes:
+        for st in sp:
+            devices_used.add(st.z.devices().pop().id)
+
+# reference: single-host global simulation, same problem + seed
+problem2 = laser_ion_problem(nz=64, nx=64, box_cells=8, ppc=4, seed=0)
+ref = Simulation(problem2, SimConfig(lb_enabled=False, sponge_width=8))
+ref.run(6)
+
+import jax.numpy as jnp
+from repro.pic.fields import field_energy
+result = {
+    "n0": n0,
+    "n_final": rt.total_alive(),
+    "n_devices_used": len(devices_used),
+    "adoptions": sum(e.adopted for e in rt.balancer.events),
+    "lb_events": len(rt.balancer.events),
+    "field_energy_rt": float(field_energy(rt.fields, rt.grid)),
+    "field_energy_ref": float(ref.history["field_energy"][-1]),
+    "box_counts_total": float(rt.box_counts().sum()),
+}
+print("RESULT " + json.dumps(result))
+"""
+
+
+@pytest.mark.slow
+def test_box_runtime_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    r = json.loads(line[len("RESULT "):])
+
+    # particle conservation (none leave the domain this early)
+    assert r["n_final"] == r["n0"], r
+    assert r["box_counts_total"] == r["n0"]
+    # boxes distributed across all 8 devices
+    assert r["n_devices_used"] == 8, r
+    # the balancer ran and adopted at least once (initial imbalance is large)
+    assert r["lb_events"] >= 1 and r["adoptions"] >= 1, r
+    # physics agrees with the single-host reference (same laser injection)
+    assert r["field_energy_rt"] == pytest.approx(r["field_energy_ref"], rel=0.05), r

@@ -1,0 +1,376 @@
+"""Infrastructure tests: checkpointing, elastic fault handling, straggler
+mitigation, optimizer (+compression), data pipeline determinism, flash
+attention parity, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def make_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(0, 1, (4, 3)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 10, (5,)), jnp.int32)},
+        "c": jnp.asarray(rng.normal(0, 1, (2, 2)), jnp.bfloat16),
+    }
+
+
+def test_checkpoint_roundtrip_exact():
+    from repro.ckpt import restore_checkpoint, save_checkpoint
+
+    tree = make_tree()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree, step=7)
+        restored, step = restore_checkpoint(d, tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_manager_retention_and_latest():
+    from repro.ckpt import CheckpointManager
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(make_tree(s), step=s)
+        from repro.ckpt.checkpoint import available_steps
+
+        assert available_steps(d) == [3, 4]
+        assert mgr.latest_step() == 4
+        restored, step = mgr.restore(make_tree())
+        assert step == 4
+        np.testing.assert_array_equal(
+            np.asarray(restored["a"]), np.asarray(make_tree(4)["a"])
+        )
+
+
+def test_checkpoint_async_save():
+    from repro.ckpt import CheckpointManager
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        tree = make_tree(1)
+        mgr.save_async(tree, step=10)
+        mgr.wait()
+        restored, step = mgr.restore(tree)
+        assert step == 10
+
+
+def test_checkpoint_structure_mismatch_rejected():
+    from repro.ckpt import restore_checkpoint, save_checkpoint
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, make_tree(), step=1)
+        bad = {"a": jnp.zeros((4, 3))}
+        with pytest.raises(ValueError):
+            restore_checkpoint(d, bad)
+
+
+def test_checkpoint_restart_resumes_training():
+    """Full restart loop: train 3 steps, checkpoint, train 2 more; a fresh
+    process-equivalent restore at step 3 must reproduce steps 4-5 exactly
+    (deterministic data pipeline + exact state restore)."""
+    from repro.ckpt import CheckpointManager
+    from repro.configs import get_config
+    from repro.data import SyntheticLMData
+    from repro.models import init_params
+    from repro.train.trainstep import init_train_state, make_train_step
+
+    cfg = get_config("yi-9b", smoke=True)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params)
+    step_fn = jax.jit(make_train_step(cfg))
+    data = SyntheticLMData(cfg, batch=4, seq_len=16, seed=42)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        losses_a = []
+        for s in range(5):
+            if s == 3:
+                mgr.save(state, step=s)
+            state, m = step_fn(state, data.batch_at(s))
+            losses_a.append(float(m["loss"]))
+        # "restart": restore at 3, rebuild pipeline, replay steps 3-4
+        restored, start = mgr.restore(state)
+        losses_b = []
+        state2 = restored
+        for s in range(start, 5):
+            state2, m = step_fn(state2, data.batch_at(s))
+            losses_b.append(float(m["loss"]))
+        np.testing.assert_allclose(losses_a[3:], losses_b, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# elastic + straggler
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_failure_recovery():
+    from repro.dist.elastic import ElasticRunner
+
+    rng = np.random.default_rng(0)
+    costs = rng.uniform(0.5, 1.0, 64)
+    costs[::8] *= 20
+    runner = ElasticRunner(n_devices=8, n_boxes=64, interval=2)
+    for s in range(8):
+        runner.step(s, costs)
+    e_healthy = runner.efficiency_history[-1]
+    runner.fail_device(2)
+    assert runner.lb.n_devices == 7
+    for s in range(8, 16):
+        runner.step(s, costs)
+    assert runner.efficiency_history[-1] > 0.8 * e_healthy
+
+
+def test_elastic_scale_up():
+    from repro.dist.elastic import ElasticRunner
+
+    rng = np.random.default_rng(1)
+    costs = rng.uniform(0.5, 1.5, 32)
+    runner = ElasticRunner(n_devices=4, n_boxes=32, interval=1)
+    runner.step(0, costs)
+    runner.add_device()
+    runner.step(1, costs)
+    assert runner.lb.n_devices == 5
+    assert np.any(runner.lb.mapping == 4)  # new device received work
+
+
+def test_elastic_cannot_lose_last_device():
+    from repro.dist.elastic import DeviceSet
+
+    ds = DeviceSet(2)
+    ds.fail(0)
+    with pytest.raises(RuntimeError):
+        ds.fail(1)
+
+
+def test_straggler_detection_and_capacity():
+    from repro.dist.straggler import StragglerDetector
+
+    det = StragglerDetector(n_devices=4, alpha=1.0)
+    work = np.array([100.0, 100.0, 100.0, 100.0])
+    time_taken = np.array([1.0, 1.0, 1.0, 2.5])  # device 3 is 2.5x slow
+    caps = det.update(work, time_taken)
+    assert det.stragglers() == [3]
+    assert caps[3] < 0.5 and np.all(caps[:3] > 0.9)
+
+
+def test_straggler_recovery():
+    from repro.dist.straggler import StragglerDetector
+
+    det = StragglerDetector(n_devices=2, alpha=0.5)
+    det.update(np.array([1.0, 1.0]), np.array([1.0, 3.0]))
+    assert det.stragglers() == [1]
+    for _ in range(8):
+        det.update(np.array([1.0, 1.0]), np.array([1.0, 1.0]))
+    assert det.stragglers() == []
+
+
+def test_straggler_feeds_capacity_aware_knapsack():
+    from repro.core import LoadBalancer, device_loads
+    from repro.dist.straggler import StragglerDetector
+
+    det = StragglerDetector(n_devices=4, alpha=1.0)
+    caps = det.update(np.full(4, 100.0), np.array([1.0, 1.0, 1.0, 4.0]))
+    lb = LoadBalancer(n_devices=4, interval=1, capacities=caps, max_boxes_per_device=None)
+    costs = np.ones(32)
+    mapping = lb.step(0, costs)
+    assert mapping is not None
+    loads = device_loads(costs, mapping, 4)
+    assert loads[3] < loads[:3].min()  # straggler got the least work
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    from repro.train.optimizer import adamw_init, adamw_update
+
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, grads, state, lr=3e-2, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_gradient_compression_error_feedback_unbiased():
+    """With error feedback, the *accumulated* compressed updates track the
+    accumulated true gradients (residual stays bounded)."""
+    from repro.train.optimizer import compress_decompress
+
+    rng = np.random.default_rng(0)
+    ef = {"g": jnp.zeros(256)}
+    total_true = np.zeros(256)
+    total_sent = np.zeros(256)
+    for i in range(50):
+        g = {"g": jnp.asarray(rng.normal(0, 1, 256), jnp.float32)}
+        total_true += np.asarray(g["g"])
+        sent, ef = compress_decompress(g, ef)
+        total_sent += np.asarray(sent["g"])
+    resid = np.abs(total_true - total_sent).max()
+    # residual is bounded by one quantization step, not growing with steps
+    assert resid < 0.2
+
+
+def test_quantize_int8_roundtrip_error_bounded():
+    from repro.train.optimizer import dequantize_int8, quantize_int8
+
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 2, 512), jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x)).max()
+    assert err <= float(scale) * 0.5 + 1e-7
+    assert q.dtype == jnp.int8
+
+
+def test_compressed_training_still_converges():
+    from repro.train.optimizer import adamw_init, adamw_update
+
+    target = jnp.asarray([0.5, -1.5, 2.5])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params, compression=True)
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(
+            params, grads, state, lr=3e-2, weight_decay=0.0, compression=True
+        )
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=5e-2)
+
+
+def test_grad_clip_global_norm():
+    from repro.train.optimizer import clip_by_global_norm
+
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, max_norm=1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert np.linalg.norm(np.asarray(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_pipeline_deterministic_per_step():
+    from repro.configs import get_config
+    from repro.data import SyntheticLMData
+
+    cfg = get_config("yi-9b", smoke=True)
+    a = SyntheticLMData(cfg, batch=4, seq_len=8, seed=1)
+    b = SyntheticLMData(cfg, batch=4, seq_len=8, seed=1)
+    np.testing.assert_array_equal(
+        np.asarray(a.batch_at(5)["tokens"]), np.asarray(b.batch_at(5)["tokens"])
+    )
+    assert not np.array_equal(
+        np.asarray(a.batch_at(5)["tokens"]), np.asarray(a.batch_at(6)["tokens"])
+    )
+
+
+def test_data_pipeline_labels_shifted():
+    from repro.configs import get_config
+    from repro.data import SyntheticLMData
+
+    cfg = get_config("yi-9b", smoke=True)
+    batch = SyntheticLMData(cfg, batch=2, seq_len=8, seed=0).batch_at(0)
+    tokens = np.asarray(batch["tokens"])
+    labels = np.asarray(batch["labels"])
+    np.testing.assert_array_equal(labels[:, :-1], tokens[:, 1:])
+    assert np.all(labels[:, -1] == -1)
+
+
+# ---------------------------------------------------------------------------
+# flash attention parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window,chunk", [(None, None), (8, None), (None, 8)])
+def test_flash_matches_naive(window, chunk):
+    from repro.models import ModelConfig
+    from repro.models.attention import attention, init_attention
+
+    cfg = ModelConfig(
+        name="t", kind="dense", n_layers=1, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, sliding_window=window, attn_chunk=chunk,
+    )
+    p, _ = init_attention(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    naive = attention(p, cfg, x, pos, force_flash=False)
+    # small blocks to exercise the multi-block path
+    from repro.models import attention as attn_mod
+
+    old_q, old_kv = attn_mod.FLASH_Q_BLOCK, attn_mod.FLASH_KV_BLOCK
+    attn_mod.FLASH_Q_BLOCK, attn_mod.FLASH_KV_BLOCK = 16, 16
+    try:
+        flash = attention(p, cfg, x, pos, force_flash=True)
+    finally:
+        attn_mod.FLASH_Q_BLOCK, attn_mod.FLASH_KV_BLOCK = old_q, old_kv
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(flash), atol=2e-5)
+
+
+def test_flash_gradients_match_naive():
+    from repro.models import ModelConfig
+    from repro.models.attention import attention, init_attention
+
+    cfg = ModelConfig(
+        name="t", kind="dense", n_layers=1, d_model=16, n_heads=2, n_kv_heads=1,
+        d_ff=32, vocab=64,
+    )
+    p, _ = init_attention(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(32), (1, 32))
+
+    from repro.models import attention as attn_mod
+
+    old_q, old_kv = attn_mod.FLASH_Q_BLOCK, attn_mod.FLASH_KV_BLOCK
+    attn_mod.FLASH_Q_BLOCK, attn_mod.FLASH_KV_BLOCK = 8, 8
+    try:
+        g_naive = jax.grad(lambda xx: attention(p, cfg, xx, pos, force_flash=False).sum())(x)
+        g_flash = jax.grad(lambda xx: attention(p, cfg, xx, pos, force_flash=True).sum())(x)
+    finally:
+        attn_mod.FLASH_Q_BLOCK, attn_mod.FLASH_KV_BLOCK = old_q, old_kv
+    np.testing.assert_allclose(np.asarray(g_naive), np.asarray(g_flash), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_spec_for_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import default_rules, spec_for
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    rules = default_rules.__wrapped__ if hasattr(default_rules, "__wrapped__") else None
+    mesh = FakeMesh()
+    rules = {
+        "batch": ("data",), "vocab": "model", "embed": "data", None: None,
+        "heads_x_hd": "model",
+    }
+    # divisible: sharded
+    assert spec_for(("vocab", "embed"), (10, 8), rules, mesh) == P("model", "data")
+    # not divisible: that dim replicated
+    assert spec_for(("vocab", "embed"), (7, 8), rules, mesh) == P(None, "data")
+    # same axis can't shard two dims
+    assert spec_for(("vocab", "heads_x_hd"), (8, 8), rules, mesh) == P("model", None)

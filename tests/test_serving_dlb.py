@@ -1,0 +1,43 @@
+"""Serving-level request DLB (the dense-arch mapping of the paper's
+technique — DESIGN.md §Arch-applicability) + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import efficiency
+from repro.train.servestep import RequestBalancer
+
+
+def test_request_balancer_balances_skewed_buckets():
+    """Buckets with very different measured decode costs (long vs short
+    prompts, dynamic-resolution images) get rebalanced across replicas."""
+    rb = RequestBalancer(n_replicas=4, interval=1)
+    costs = np.array([10.0, 10.0, 10.0, 10.0, 1.0, 1.0, 1.0, 1.0] * 2)
+    mapping = rb.assign(0, costs)
+    e = efficiency(costs, mapping, 4)
+    assert e > 0.9
+
+
+def test_request_balancer_gate_prevents_thrash():
+    rb = RequestBalancer(n_replicas=4, interval=1)
+    rng = np.random.default_rng(0)
+    costs = rng.uniform(1.0, 2.0, 16)
+    m0 = rb.assign(0, costs).copy()
+    # near-identical costs next round: the 10% gate must keep the mapping
+    m1 = rb.assign(1, costs * rng.uniform(0.98, 1.02, 16))
+    np.testing.assert_array_equal(m0, m1)
+
+
+@given(
+    st.lists(st.floats(0.1, 100.0, allow_nan=False), min_size=4, max_size=40),
+    st.integers(2, 8),
+)
+@settings(max_examples=50, deadline=None)
+def test_request_balancer_never_worse_than_round_robin(costs, n_replicas):
+    from repro.core import round_robin_mapping
+
+    costs = np.asarray(costs)
+    rb = RequestBalancer(n_replicas=n_replicas, interval=1)
+    mapping = rb.assign(0, costs)
+    rr = round_robin_mapping(len(costs), n_replicas)
+    assert efficiency(costs, mapping, n_replicas) >= efficiency(costs, rr, n_replicas) - 1e-9

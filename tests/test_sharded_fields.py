@@ -1,0 +1,58 @@
+"""shard_map FDTD vs global solver — real 8-device subprocess validation."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pic import Grid2D
+from repro.pic.fields import Fields, step_b_half, step_e
+from repro.pic.sharded import make_sharded_fdtd_step
+
+grid = Grid2D(nz=64, nx=32, dz=0.3, dx=0.25, box_nz=16, box_nx=16)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(0)
+f0 = Fields(*(jnp.asarray(rng.normal(0, 1, grid.shape), jnp.float32) for _ in range(6)))
+j = tuple(jnp.asarray(rng.normal(0, 0.1, grid.shape), jnp.float32) for _ in range(3))
+
+# global reference (periodic roll-based)
+f_ref = f0
+for _ in range(5):
+    f_ref = step_b_half(f_ref, grid)
+    f_ref = step_e(f_ref, j, grid)
+    f_ref = step_b_half(f_ref, grid)
+
+# sharded: block-distribute, run, gather
+step, sharding = make_sharded_fdtd_step(grid, mesh)
+f_sh = Fields(*(jax.device_put(c, sharding) for c in f0))
+j_sh = tuple(jax.device_put(c, sharding) for c in j)
+for _ in range(5):
+    f_sh = step(f_sh, j_sh)
+
+errs = [float(jnp.max(jnp.abs(a - b))) for a, b in zip(f_ref, f_sh)]
+n_shards = len(set(d.id for c in f_sh for d in c.devices()))
+print("RESULT " + json.dumps({"max_err": max(errs), "n_devices": n_shards}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fdtd_matches_global():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env, timeout=600
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    r = json.loads(line[len("RESULT "):])
+    assert r["n_devices"] == 8, r
+    assert r["max_err"] < 1e-5, r
