@@ -1,0 +1,286 @@
+"""Device-resident step fusion: the execution-engine benchmark.
+
+Measures steps/sec on the fiducial problem for three execution engines:
+
+  * ``fused``     — ``SimConfig.fused=True``: the whole LB interval runs as
+                    one jitted ``lax.scan`` with donated buffers; one
+                    device→host sync per LB round (see ``repro.pic.engine``).
+  * ``per_step``  — ``SimConfig.fused=False``: one dispatch + host sync per
+                    step, same (optimized) physics.  Isolates what interval
+                    fusion alone buys.
+  * ``seed``      — a faithful reconstruction of the seed engine this PR
+                    replaced: modulo flat-scatter deposition / per-point
+                    gather (16 scatter indices per particle per component)
+                    plus the seed run loop's per-step host traffic
+                    (``np.asarray(counts)``, a device round trip for
+                    ``box_work_counters``, per-step ``record_step`` and
+                    ``float()`` diagnostic syncs).  This is the "per-step
+                    execution" baseline the fused engine is measured
+                    against end to end.
+
+Sweeps ``lb_interval`` ∈ {1, 5, 10, 50} and box counts.  Run:
+
+    PYTHONPATH=src python benchmarks/bench_step_fusion.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.launch import set_performance_flags
+
+set_performance_flags()  # before backend init
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import WorkCounterCost
+from repro.pic import Simulation, SimConfig, laser_ion_problem
+from repro.pic.deposition import box_particle_counts, box_work_counters
+from repro.pic.fields import apply_sponge, field_energy, step_b_half, step_e
+from repro.pic.grid import STAGGER
+from repro.pic.particles import advance_positions, boris_push, kinetic_energy
+from repro.pic.shapes import shape_weights
+
+FIDUCIAL = dict(nz=128, nx=128, box_cells=16, ppc=4, seed=0)
+QUICK = dict(nz=64, nx=64, box_cells=16, ppc=2, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# seed-engine control: the physics + loop structure this PR replaced
+# ---------------------------------------------------------------------------
+
+
+def _seed_interp(field, comp, z, x, grid, order):
+    """Seed gather: one index per stencil *point* (16N for order 3)."""
+    off_z, off_x = STAGGER[comp]
+    iz, wz = shape_weights(z, grid.dz, off_z, order)
+    ix, wx = shape_weights(x, grid.dx, off_x, order)
+    npts = wz.shape[-1]
+    izk = (iz[:, None] + jnp.arange(npts)[None, :]) % grid.nz
+    ixk = (ix[:, None] + jnp.arange(npts)[None, :]) % grid.nx
+    vals = field[izk[:, :, None], ixk[:, None, :]]
+    return jnp.einsum("pij,pi,pj->p", vals, wz, wx)
+
+
+def _seed_deposit_component(comp, z, x, val, grid, order):
+    """Seed deposition: flat modulo scatter, one index per stencil point."""
+    off_z, off_x = STAGGER[comp]
+    iz, wz = shape_weights(z, grid.dz, off_z, order)
+    ix, wx = shape_weights(x, grid.dx, off_x, order)
+    npts = wz.shape[-1]
+    izk = (iz[:, None] + jnp.arange(npts)[None, :]) % grid.nz
+    ixk = (ix[:, None] + jnp.arange(npts)[None, :]) % grid.nx
+    flat_idx = (izk[:, :, None] * grid.nx + ixk[:, None, :]).reshape(-1)
+    contrib = (val[:, None, None] * wz[:, :, None] * wx[:, None, :]).reshape(-1)
+    return jnp.zeros(grid.n_cells, jnp.float32).at[flat_idx].add(contrib).reshape(grid.shape)
+
+
+def _make_seed_step(sim: Simulation):
+    grid, order = sim.grid, sim.config.shape_order
+    sponge, laser = sim._sponge, sim.laser
+
+    def step(fields, species, t):
+        dt = grid.dt
+        jx = jnp.zeros(grid.shape, jnp.float32)
+        jy = jnp.zeros(grid.shape, jnp.float32)
+        jz = jnp.zeros(grid.shape, jnp.float32)
+        counts = jnp.zeros(grid.n_boxes, jnp.float32)
+        new_species = []
+        for p in species:
+            eb = tuple(
+                _seed_interp(getattr(fields, c), c, p.z, p.x, grid, order)
+                for c in ("ex", "ey", "ez", "bx", "by", "bz")
+            )
+            p = advance_positions(boris_push(p, eb, dt), grid, dt)
+            new_species.append(p)
+            gamma = p.gamma()
+            coef = jnp.where(p.alive, p.q * p.w / (grid.dz * grid.dx), 0.0) / gamma
+            jx = jx + _seed_deposit_component("jx", p.z, p.x, coef * p.ux, grid, order)
+            jy = jy + _seed_deposit_component("jy", p.z, p.x, coef * p.uy, grid, order)
+            jz = jz + _seed_deposit_component("jz", p.z, p.x, coef * p.uz, grid, order)
+            counts = counts + box_particle_counts(p, grid)
+        species = tuple(new_species)
+        fields = step_b_half(fields, grid)
+        fields = step_e(fields, (jx, jy, jz), grid)
+        fields = step_b_half(fields, grid)
+        if laser is not None:
+            fields = laser.inject(fields, grid, t)
+        fields = apply_sponge(fields, sponge)
+        diag = {
+            "field_energy": field_energy(fields, grid),
+            "kinetic_energy": sum(kinetic_energy(p) for p in species),
+        }
+        return fields, species, counts, diag
+
+    return jax.jit(step)
+
+
+def _run_seed_loop(sim: Simulation, step_fn, n_steps: int) -> None:
+    """The seed's run() loop: per-step sync, a device round trip for the
+    work counters, and per-step Python bookkeeping."""
+    cfg = sim.config
+    neighbors = sim.decomp.neighbors
+    surface = sim.decomp.surface_bytes()
+    for _ in range(n_steps):
+        sim.fields, sim.species, counts_dev, diag = step_fn(
+            sim.fields, sim.species, sim.t
+        )
+        counts = np.asarray(counts_dev)
+        true_costs = (
+            np.asarray(box_work_counters(jnp.asarray(counts), sim.grid))
+            / cfg.ops_per_second
+        )
+        lb_called = False
+        bytes_moved = 0.0
+        if cfg.lb_enabled and sim.balancer.should_run(sim.step_idx):
+            lb_called = True
+            measured = WorkCounterCost().measure(
+                work_counters=true_costs * cfg.ops_per_second
+            )
+            new_mapping = sim.balancer.step(
+                sim.step_idx,
+                measured,
+                box_coords=sim.decomp.coords,
+                box_bytes=sim.decomp.box_bytes(counts),
+            )
+            if new_mapping is not None:
+                bytes_moved = sim.balancer.events[-1].bytes_moved
+        sim.cluster.record_step(
+            sim.step_idx,
+            true_costs,
+            sim.balancer.mapping,
+            neighbors=neighbors,
+            surface_bytes=surface,
+            lb_bytes_moved=bytes_moved,
+            lb_called=lb_called,
+        )
+        loads = np.zeros(cfg.n_virtual_devices)
+        np.add.at(loads, sim.balancer.mapping, true_costs)
+        float(diag["field_energy"])  # the seed's per-scalar diagnostic syncs
+        float(diag["kinetic_energy"])
+        sim.t += sim.grid.dt
+        sim.step_idx += 1
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def _round_up(n: int, interval: int) -> int:
+    return ((n + interval - 1) // interval) * interval
+
+
+def _steps_per_sec(problem_kwargs: Dict, n_steps: int, reps: int = 3, **cfg_kwargs) -> float:
+    """Median steps/sec over ``reps`` segments, warmup (compile) excluded.
+    Segments are whole LB rounds so every segment reuses the same compiled
+    chunk lengths."""
+    sim = Simulation(
+        laser_ion_problem(**problem_kwargs), SimConfig(n_virtual_devices=8, **cfg_kwargs)
+    )
+    interval = sim.config.lb_interval
+    seg = _round_up(n_steps, interval)
+    sim.run(seg)  # compile + warm
+    rates = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sim.run(seg)
+        rates.append(seg / (time.perf_counter() - t0))
+    return float(np.median(rates))
+
+
+def _seed_steps_per_sec(problem_kwargs: Dict, n_steps: int, reps: int = 3, **cfg_kwargs) -> float:
+    sim = Simulation(
+        laser_ion_problem(**problem_kwargs),
+        SimConfig(n_virtual_devices=8, fused=False, **cfg_kwargs),
+    )
+    step_fn = _make_seed_step(sim)
+    seg = _round_up(n_steps, sim.config.lb_interval)
+    _run_seed_loop(sim, step_fn, seg)
+    rates = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _run_seed_loop(sim, step_fn, seg)
+        rates.append(seg / (time.perf_counter() - t0))
+    return float(np.median(rates))
+
+
+def run(quick: bool = False) -> List[Dict]:
+    problem = QUICK if quick else FIDUCIAL
+    n_steps = 10 if quick else 30
+    reps = 1 if quick else 3
+    intervals = (1, 10) if quick else (1, 5, 10, 50)
+    rows = []
+
+    ratio_at_10 = None
+    for interval in intervals:
+        fused = _steps_per_sec(problem, n_steps, reps, lb_interval=interval, fused=True)
+        per_step = _steps_per_sec(problem, n_steps, reps, lb_interval=interval, fused=False)
+        if interval == 10:
+            ratio_at_10 = fused / per_step
+        rows.append(
+            {
+                "name": f"step_fusion/interval{interval}",
+                "us_per_call": round(1e6 / fused, 1),
+                "derived": {
+                    "fused_steps_per_s": round(fused, 2),
+                    "per_step_steps_per_s": round(per_step, 2),
+                    "fused_over_per_step": round(fused / per_step, 3),
+                    "host_syncs_per_lb_round_fused": 1,
+                },
+            }
+        )
+
+    if not quick:
+        for box_cells in (8, 16, 32):
+            pk = dict(problem, box_cells=box_cells)
+            fused = _steps_per_sec(pk, n_steps, reps, lb_interval=10, fused=True)
+            per_step = _steps_per_sec(pk, n_steps, reps, lb_interval=10, fused=False)
+            rows.append(
+                {
+                    "name": f"step_fusion/box_cells{box_cells}",
+                    "us_per_call": round(1e6 / fused, 1),
+                    "derived": {
+                        "n_boxes": (problem["nz"] // box_cells) * (problem["nx"] // box_cells),
+                        "fused_steps_per_s": round(fused, 2),
+                        "fused_over_per_step": round(fused / per_step, 3),
+                    },
+                }
+            )
+
+    # acceptance row: fused engine vs the seed per-step engine, end to end
+    seed_rate = _seed_steps_per_sec(problem, n_steps, reps, lb_interval=10)
+    fused_rate = _steps_per_sec(problem, n_steps, reps, lb_interval=10, fused=True)
+    rows.append(
+        {
+            "name": "step_fusion/vs_seed_engine",
+            "us_per_call": round(1e6 / fused_rate, 1),
+            "derived": {
+                "seed_engine_steps_per_s": round(seed_rate, 2),
+                "fused_steps_per_s": round(fused_rate, 2),
+                "fused_over_seed_engine": round(fused_rate / seed_rate, 3),
+                "fused_over_per_step_at_interval10": (
+                    round(ratio_at_10, 3) if ratio_at_10 is not None else None
+                ),
+            },
+        }
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small problem, CI smoke")
+    args = ap.parse_args()
+    import json
+
+    for r in run(quick=args.quick):
+        print(f"{r['name']:40s} {json.dumps(r['derived'])}")
+
+
+if __name__ == "__main__":
+    main()

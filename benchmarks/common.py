@@ -13,6 +13,10 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.launch import set_performance_flags
+
+set_performance_flags()  # consistent tuned XLA env before backend init
+
 from repro.pic import Simulation, SimConfig, laser_ion_problem, uniform_plasma_problem
 
 # fiducial scaled problem (paper: 1920^2 cells, 64^2 boxes, 96 GPUs;

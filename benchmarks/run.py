@@ -12,6 +12,7 @@ import sys
 import traceback
 
 MODULES = [
+    "bench_step_fusion",    # device-resident interval engine vs per-step/seed
     "bench_cost_schemes",   # Fig 6a group 1 + Fig 3
     "bench_policies",       # Fig 6a group 2 + Fig 4
     "bench_box_size",       # Fig 6a group 3

@@ -6,6 +6,11 @@ The abstraction is model-agnostic: *work items* (PIC boxes, MoE experts,
 serving requests) with in-situ measured costs are assigned to devices by a
 distribution mapping, re-computed under a knapsack or space-filling-curve
 policy and adopted only when the efficiency gain clears a threshold.
+
+Bookkeeping is interval-bulk by design: clients that execute a whole LB
+round device-side (see ``repro.pic.engine``) replay it into the walltime
+model with one vectorized ``VirtualCluster.record_interval`` call instead
+of one Python call per step.
 """
 from .costs import (
     ActivityLedger,

@@ -76,15 +76,21 @@ class HeuristicCost(CostMeasure):
     hyperparameter_free: bool = False
 
     def measure(self, *, n_particles: np.ndarray, n_cells: np.ndarray, **_) -> np.ndarray:
+        """Raw weighted sum — deliberately NO per-component normalization.
+
+        The weights are calibrated per-unit-walltime of one particle / one
+        cell (as in WarpX), so ``w_p * n_p + w_c * n_c`` is already in
+        consistent (arbitrary) time units; rescaling each component by its
+        population total would silently change the particle:cell balance
+        with the population ratio and hence the LB decisions.  Pinned by
+        ``tests/test_core_costs.py::test_heuristic_is_raw_weighted_sum``.
+        """
         n_particles = np.asarray(n_particles, dtype=np.float64)
         n_cells = np.asarray(n_cells, dtype=np.float64)
         if n_particles.shape != n_cells.shape:
             raise ValueError(
                 f"per-box particle/cell count shapes differ: {n_particles.shape} vs {n_cells.shape}"
             )
-        # Normalize each component so the weights express *relative* importance
-        # independent of the particle:cell population ratio (as in WarpX, where
-        # weights were calibrated per-unit-walltime of one particle / one cell).
         return self.particle_weight * n_particles + self.cell_weight * n_cells
 
 

@@ -109,17 +109,58 @@ class VirtualCluster:
         lb_bytes_moved: float = 0.0,
         lb_called: bool = False,
     ) -> StepRecord:
-        comp = self.compute_time(costs, mapping)
+        return self.record_interval(
+            step,
+            np.asarray(costs, dtype=np.float64)[None, :],
+            mapping,
+            neighbors=neighbors,
+            surface_bytes=surface_bytes,
+            lb_bytes_moved=lb_bytes_moved,
+            lb_called=lb_called,
+        )[0]
+
+    def record_interval(
+        self,
+        start_step: int,
+        costs: np.ndarray,
+        mapping: np.ndarray,
+        *,
+        neighbors: Optional[Sequence[Sequence[int]]] = None,
+        surface_bytes: Optional[np.ndarray] = None,
+        lb_bytes_moved: float = 0.0,
+        lb_called: bool = False,
+    ) -> List[StepRecord]:
+        """Replay a whole LB round of steps in bulk.
+
+        ``costs`` has shape ``(n_steps, n_boxes)`` — the per-step true-cost
+        history fetched from the device in one sync (see
+        ``repro.pic.engine``).  The mapping is constant within a round (it
+        only changes at round boundaries), so halo-comm time is evaluated
+        once and per-step loads come from a single vectorized scatter; the
+        LB charge (gather + redistribution) lands on the round's first step.
+        Appends and returns one :class:`StepRecord` per step, identical to
+        calling :meth:`record_step` step by step.
+        """
+        costs = np.asarray(costs, dtype=np.float64)
+        if costs.ndim != 2:
+            raise ValueError(f"costs must be (n_steps, n_boxes), got {costs.shape}")
+        mapping = np.asarray(mapping)
+        n_steps, n_boxes = costs.shape
+        onehot = (mapping[:, None] == np.arange(self.n_devices)[None, :]).astype(
+            np.float64
+        )
+        loads = (costs @ onehot) / self._caps()[None, :]  # (n_steps, n_devices)
+        comp = loads.max(axis=1)
+        mean = loads.mean(axis=1)
         comm = self.comm_time(mapping, neighbors, surface_bytes)
-        lbt = self.lb_time(len(costs), lb_bytes_moved) if lb_called else 0.0
-        loads = np.zeros(self.n_devices)
-        np.add.at(loads, np.asarray(mapping), np.asarray(costs, dtype=np.float64))
-        loads /= self._caps()
-        mx = float(np.max(loads)) if len(loads) else 0.0
-        eff = float(np.mean(loads)) / mx if mx > 0 else 1.0
-        rec = StepRecord(step, comp, comm, lbt, eff)
-        self.records.append(rec)
-        return rec
+        recs = []
+        for i in range(n_steps):
+            lbt = self.lb_time(n_boxes, lb_bytes_moved) if (lb_called and i == 0) else 0.0
+            mx = float(comp[i])
+            eff = float(mean[i]) / mx if mx > 0 else 1.0
+            recs.append(StepRecord(int(start_step) + i, mx, comm, lbt, eff))
+        self.records.extend(recs)
+        return recs
 
     # -- aggregates ------------------------------------------------------
     @property

@@ -31,7 +31,14 @@ from .constants import DEPOSIT_TILE
 from .deposition import deposit_local_tiles
 from .gather_push import gather_push_move
 
-__all__ = ["bin_particles", "pic_substep", "field_tiles", "assemble_grid", "Binned"]
+__all__ = [
+    "bin_particles",
+    "pic_substep",
+    "pic_substep_body",
+    "field_tiles",
+    "assemble_grid",
+    "Binned",
+]
 
 
 def default_interpret() -> bool:
@@ -142,10 +149,7 @@ def bin_particles(p: Particles, grid: Grid2D, cap: int) -> Binned:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("grid", "dt", "cap", "tile", "interpret")
-)
-def pic_substep(
+def pic_substep_body(
     f: Fields,
     p: Particles,
     *,
@@ -160,6 +164,12 @@ def pic_substep(
     Returns (new_particles, (jx, jy, jz), work_counters, counts, n_dropped).
     Semantics match the pure-jnp path: gather(E^n, B^n) → Boris → move →
     direct order-3 deposition at the new positions.
+
+    This is the un-jitted body so callers that are already traced — the
+    scanned interval engine in ``repro.pic.engine`` — can inline it and
+    thread the in-kernel work counters through the scan carry/outputs
+    without a nested dispatch.  ``pic_substep`` below is the jitted
+    standalone wrapper.
     """
     b = bin_particles(p, grid, cap)
     tiles = field_tiles(f, grid)
@@ -213,3 +223,8 @@ def pic_substep(
         alive=p.alive & jnp.where(b.valid, inside, p.alive),
     )
     return new_p, (jx, jy, jz), counters, b.counts, b.n_dropped
+
+
+pic_substep = jax.jit(
+    pic_substep_body, static_argnames=("grid", "dt", "cap", "tile", "interpret")
+)

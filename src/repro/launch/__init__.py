@@ -1,1 +1,18 @@
-"""Launch layer: production mesh, multi-pod dry-run, end-to-end drivers."""
+"""Launch layer: XLA environment tuning, production mesh, multi-pod dry-run.
+
+``repro.launch.xla`` is import-light (no jax) so callers can tune
+``XLA_FLAGS`` before the backend initializes.
+"""
+from .xla import (
+    GPU_PERF_FLAGS,
+    force_host_device_count,
+    merge_xla_flags,
+    set_performance_flags,
+)
+
+__all__ = [
+    "GPU_PERF_FLAGS",
+    "force_host_device_count",
+    "merge_xla_flags",
+    "set_performance_flags",
+]

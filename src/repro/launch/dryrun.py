@@ -1,5 +1,7 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from .xla import force_host_device_count, set_performance_flags
+
+force_host_device_count(512)
+set_performance_flags()
 # ^ MUST precede any jax import: jax locks the device count on first init.
 # This entrypoint (and ONLY this one) fakes 512 host devices so the
 # production meshes (16x16 single-pod, 2x16x16 multi-pod) can be built.

@@ -1,0 +1,78 @@
+"""XLA / JAX environment tuning (the SNIPPETS.md performance-flags pattern).
+
+All helpers mutate ``os.environ`` only and import no jax: XLA reads
+``XLA_FLAGS`` when the backend initializes, so these must run before the
+first jax computation (ideally before ``import jax``).  Benchmarks, the
+dry-run entrypoint and the test suite all go through here so every run
+sees one consistent, tuned environment.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+from typing import Iterable
+
+__all__ = [
+    "GPU_PERF_FLAGS",
+    "merge_xla_flags",
+    "set_performance_flags",
+    "force_host_device_count",
+]
+
+#: Tuned GPU compiler flags (jax.dev gpu_performance_tips + related repos):
+#: latency-hiding scheduling + async collectives overlap comm with compute.
+GPU_PERF_FLAGS = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+    "--xla_gpu_triton_gemm_any=True",
+)
+
+
+def _warn_if_jax_initialized() -> None:
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return
+    try:
+        initialized = jax._src.xla_bridge._backends  # noqa: SLF001
+    except AttributeError:  # jax moved the registry; can't tell — stay quiet
+        return
+    if initialized:
+        warnings.warn(
+            "XLA_FLAGS changed after a jax backend was initialized; the new "
+            "flags will not take effect in this process",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
+def merge_xla_flags(new_flags: Iterable[str]) -> str:
+    """Merge flags into ``XLA_FLAGS``, replacing same-key entries, keeping
+    the rest.  Returns the resulting value."""
+    _warn_if_jax_initialized()
+    parts = [p for p in os.environ.get("XLA_FLAGS", "").split() if p]
+    for flag in new_flags:
+        key = flag.split("=", 1)[0]
+        parts = [p for p in parts if p.split("=", 1)[0] != key]
+        parts.append(flag)
+    merged = " ".join(parts)
+    os.environ["XLA_FLAGS"] = merged
+    return merged
+
+
+def set_performance_flags(platform: str | None = None) -> None:
+    """Apply the tuned flag set for ``platform`` (default: $JAX_PLATFORMS or
+    'cpu'; 'gpu', 'cuda' and 'rocm' all select the GPU flags).  CPU needs no
+    compiler flags today — the call is still the one place a future CPU/TPU
+    flag set would land."""
+    platform = platform or os.environ.get("JAX_PLATFORMS", "cpu").split(",")[0]
+    if platform.lower() in ("gpu", "cuda", "rocm"):
+        merge_xla_flags(GPU_PERF_FLAGS)
+
+
+def force_host_device_count(n: int) -> None:
+    """Fake ``n`` host devices (sharding tests / dry-run meshes on CPU).
+    Must run before jax initializes its backends."""
+    if n <= 0:
+        raise ValueError("device count must be positive")
+    merge_xla_flags((f"--xla_force_host_platform_device_count={n}",))

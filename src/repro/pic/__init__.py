@@ -10,6 +10,7 @@ from .fields import Fields, step_e, step_b_half
 from .particles import Particles, boris_push, gather_fields, advance_positions
 from .deposition import deposit_current, box_work_counters
 from .boxes import BoxDecomposition
+from .engine import StepOutputs, build_step_body, make_interval_fn
 from .laser import LaserAntenna
 from .problem import laser_ion_problem, uniform_plasma_problem
 from .stepper import Simulation, SimConfig
@@ -31,4 +32,7 @@ __all__ = [
     "uniform_plasma_problem",
     "Simulation",
     "SimConfig",
+    "StepOutputs",
+    "build_step_body",
+    "make_interval_fn",
 ]

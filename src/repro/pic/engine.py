@@ -1,0 +1,157 @@
+"""Device-resident multi-step PIC execution engine.
+
+The paper's central finding is that in-situ cost assessment must be cheap
+relative to the physics (arXiv 2104.11385 §2.2): the balancer only consumes
+costs every ``lb_interval`` steps, so nothing in the hot loop should touch
+the host more often than that.  This module provides the pure, jitted side
+of that contract:
+
+  * :func:`build_step_body` — one PIC step as a pure function
+    ``(fields, species, t) -> (fields, species, StepOutputs)``.  All per-box
+    accounting (particle counts, executed-work counters) is computed
+    device-side inside the body; the Pallas path threads the in-kernel
+    counters straight out of ``repro.kernels`` instead of recomputing them.
+  * :func:`make_interval_fn` — wraps the step body in a ``jax.lax.scan``
+    over ``n_steps`` steps with **donated** field/particle buffers
+    (``donate_argnums``), so the interval runs as one XLA computation with
+    no per-step dispatch, no per-step buffer copies, and no host transfer.
+    Per-step counts, work counters and scalar diagnostics come back stacked
+    into device-side history buffers of shape ``(n_steps, ...)`` — one
+    fetch delivers the whole interval.
+
+The host-side driver that owns the LoadBalancer / VirtualCluster bookkeeping
+lives in ``repro.pic.stepper``; sharded multi-device stepping
+(``repro.pic.sharded``) and async dispatch are expected to reuse this same
+scanned body.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .deposition import box_particle_counts, box_work_counters, deposit_current
+from .fields import Fields, apply_sponge, field_energy, step_b_half, step_e
+from .grid import Grid2D
+from .particles import (
+    Particles,
+    advance_positions,
+    boris_push,
+    gather_fields,
+    kinetic_energy,
+)
+
+__all__ = ["StepOutputs", "build_step_body", "make_interval_fn"]
+
+
+class StepOutputs(NamedTuple):
+    """Per-step device-side accounting emitted by the step body.
+
+    Under :func:`make_interval_fn` each leaf gains a leading ``(n_steps,)``
+    axis (the scan's stacked ys) — the interval's history buffers.
+    """
+
+    counts: jax.Array  # (n_boxes,) f32 — alive particles per box
+    work: jax.Array  # (n_boxes,) f32 — executed work units (in-kernel counters)
+    field_energy: jax.Array  # scalar f32
+    kinetic_energy: jax.Array  # scalar f32
+
+
+def build_step_body(
+    grid: Grid2D,
+    *,
+    shape_order: int = 3,
+    sponge: Optional[jax.Array] = None,
+    laser=None,
+    use_pallas: bool = False,
+    pallas_cap: Optional[int] = None,
+    interpret: bool = True,
+) -> Callable:
+    """Build the pure single-step body (not jitted — compose freely).
+
+    Returns ``step(fields, species, t) -> (fields, species, StepOutputs)``.
+    """
+    if use_pallas:
+        if shape_order != 3:
+            raise ValueError("the Pallas kernels implement order-3 shapes only")
+        if pallas_cap is None:
+            raise ValueError("use_pallas=True requires pallas_cap")
+        from ..kernels import ops as kops
+
+    def step(fields: Fields, species: Tuple[Particles, ...], t):
+        dt = grid.dt
+        jx = jnp.zeros(grid.shape, jnp.float32)
+        jy = jnp.zeros(grid.shape, jnp.float32)
+        jz = jnp.zeros(grid.shape, jnp.float32)
+        counts = jnp.zeros(grid.n_boxes, jnp.float32)
+        if use_pallas:
+            work = jnp.zeros(grid.n_boxes, jnp.float32)
+            new_species = []
+            for p in species:
+                p2, (jx_, jy_, jz_), counters, counts_b, _nd = kops.pic_substep_body(
+                    fields, p, grid=grid, dt=dt, cap=pallas_cap, interpret=interpret
+                )
+                new_species.append(p2)
+                jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
+                counts = counts + counts_b.astype(jnp.float32)
+                work = work + counters.astype(jnp.float32)
+            species = tuple(new_species)
+        else:
+            # push + move all species with E^n, B^n
+            species = tuple(
+                advance_positions(
+                    boris_push(p, gather_fields(fields, p.z, p.x, grid, shape_order), dt),
+                    grid,
+                    dt,
+                )
+                for p in species
+            )
+            for p in species:
+                jx_, jy_, jz_ = deposit_current(p, grid, shape_order)
+                jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
+                counts = counts + box_particle_counts(p, grid)
+            work = box_work_counters(counts, grid)
+        # Maxwell: B half, E full, B half
+        fields = step_b_half(fields, grid)
+        fields = step_e(fields, (jx, jy, jz), grid)
+        fields = step_b_half(fields, grid)
+        if laser is not None:
+            fields = laser.inject(fields, grid, t)
+        if sponge is not None:
+            fields = apply_sponge(fields, sponge)
+        out = StepOutputs(
+            counts=counts,
+            work=work,
+            field_energy=field_energy(fields, grid),
+            kinetic_energy=sum(kinetic_energy(p) for p in species),
+        )
+        return fields, species, out
+
+    return step
+
+
+def make_interval_fn(step_body: Callable, grid: Grid2D) -> Callable:
+    """Fuse ``n_steps`` applications of ``step_body`` into one jitted scan.
+
+    Returns ``interval(fields, species, t0, n_steps) ->
+    (fields, species, StepOutputs)`` where the outputs carry a leading
+    ``(n_steps,)`` history axis.  ``n_steps`` is static (one compile per
+    distinct chunk length — the driver uses at most the LB interval plus a
+    remainder).  The incoming field/particle buffers are donated: XLA
+    updates them in place instead of copying every step.
+    """
+    dt = grid.dt
+
+    def interval(fields: Fields, species, t0, n_steps: int):
+        def body(carry, i):
+            f, s = carry
+            f, s, out = step_body(f, s, t0 + i * dt)
+            return (f, s), out
+
+        (fields_, species_), outs = jax.lax.scan(
+            body, (fields, species), jnp.arange(n_steps, dtype=jnp.float32)
+        )
+        return fields_, species_, outs
+
+    return jax.jit(interval, static_argnames=("n_steps",), donate_argnums=(0, 1))

@@ -34,8 +34,10 @@ class Fields(NamedTuple):
 
     @classmethod
     def zeros(cls, grid: Grid2D, dtype=jnp.float32) -> "Fields":
-        z = jnp.zeros(grid.shape, dtype=dtype)
-        return cls(z, z, z, z, z, z)
+        # six distinct buffers (not one aliased array): the fused interval
+        # engine donates field buffers, and XLA rejects donating the same
+        # buffer twice
+        return cls(*(jnp.zeros(grid.shape, dtype=dtype) for _ in range(6)))
 
 
 def _ddz_fwd(f: jax.Array, dz: float) -> jax.Array:

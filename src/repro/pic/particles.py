@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from .fields import Fields
-from .grid import Grid2D, STAGGER
+from .grid import Grid2D
 from .shapes import shape_weights
 
 __all__ = [
@@ -46,29 +46,62 @@ class Particles(NamedTuple):
         return jnp.sqrt(1.0 + self.ux**2 + self.uy**2 + self.uz**2)
 
 
-def _interp_component(field: jax.Array, comp: str, z, x, grid: Grid2D, order: int) -> jax.Array:
-    """Gather one staggered field component to particle positions."""
-    off_z, off_x = STAGGER[comp]
-    iz, wz = shape_weights(z, grid.dz, off_z, order)
-    ix, wx = shape_weights(x, grid.dx, off_x, order)
-    npts = wz.shape[-1]
-    izk = (iz[:, None] + jnp.arange(npts)[None, :]) % grid.nz  # (N, n+1)
-    ixk = (ix[:, None] + jnp.arange(npts)[None, :]) % grid.nx
-    # (N, n+1, n+1) gather then weighted sum
-    vals = field[izk[:, :, None], ixk[:, None, :]]
+#: guard-cell padding for the windowed gather; matches the deposit pad so
+#: one-step excursions of just-killed particles stay in bounds (their
+#: contributions are masked to zero anyway)
+_GATHER_PAD = 4
+
+
+def _interp_component(
+    field: jax.Array,
+    iz: jax.Array,
+    wz: jax.Array,
+    ix: jax.Array,
+    wx: jax.Array,
+    order: int,
+) -> jax.Array:
+    """Gather one staggered field component to particle positions.
+
+    Windowed gather on a periodically padded grid: one gather index per
+    particle pulling its whole (order+1)² stencil patch, instead of one
+    index per stencil point — per-index decode dominates XLA:CPU
+    gather/scatter cost (see the matching deposit in ``deposition.py``).
+    """
+    npts = order + 1
+    pad = _GATHER_PAD
+    if min(field.shape) < 2 * pad:
+        raise ValueError(
+            f"windowed gather needs >= {2 * pad} cells per axis, "
+            f"got grid {field.shape[0]}x{field.shape[1]}"
+        )
+    padded = jnp.pad(field, pad, mode="wrap")
+    starts = jnp.stack([iz + pad, ix + pad], axis=1)
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=(1, 2), collapsed_slice_dims=(), start_index_map=(0, 1)
+    )
+    vals = jax.lax.gather(padded, starts, dnums, slice_sizes=(npts, npts))
     return jnp.einsum("pij,pi,pj->p", vals, wz, wx)
 
 
 def gather_fields(
     f: Fields, z: jax.Array, x: jax.Array, grid: Grid2D, order: int = 3
 ) -> Tuple[jax.Array, ...]:
-    """Interpolate all six components to particle positions (staggering-aware)."""
-    ex = _interp_component(f.ex, "ex", z, x, grid, order)
-    ey = _interp_component(f.ey, "ey", z, x, grid, order)
-    ez = _interp_component(f.ez, "ez", z, x, grid, order)
-    bx = _interp_component(f.bx, "bx", z, x, grid, order)
-    by = _interp_component(f.by, "by", z, x, grid, order)
-    bz = _interp_component(f.bz, "bz", z, x, grid, order)
+    """Interpolate all six components to particle positions (staggering-aware).
+
+    The six Yee-staggered components draw on only two distinct weight sets
+    per axis (offset 0 and 0.5), computed once and shared: ex=(z0,x½),
+    ey=(z0,x0), ez=(z½,x0), bx=(z½,x0), by=(z½,x½), bz=(z0,x½).
+    """
+    iz0, wz0 = shape_weights(z, grid.dz, 0.0, order)
+    izh, wzh = shape_weights(z, grid.dz, 0.5, order)
+    ix0, wx0 = shape_weights(x, grid.dx, 0.0, order)
+    ixh, wxh = shape_weights(x, grid.dx, 0.5, order)
+    ex = _interp_component(f.ex, iz0, wz0, ixh, wxh, order)
+    ey = _interp_component(f.ey, iz0, wz0, ix0, wx0, order)
+    ez = _interp_component(f.ez, izh, wzh, ix0, wx0, order)
+    bx = _interp_component(f.bx, izh, wzh, ix0, wx0, order)
+    by = _interp_component(f.by, izh, wzh, ixh, wxh, order)
+    bz = _interp_component(f.bz, iz0, wz0, ixh, wxh, order)
     return ex, ey, ez, bx, by, bz
 
 

@@ -24,6 +24,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .fields import Fields
 from .grid import Grid2D
 
@@ -38,7 +43,10 @@ def _neighbor_row(block: jax.Array, axis_name: str, direction: int, row_axis: in
     """Ring-exchange one boundary row/col: each shard receives its
     neighbour's edge in `direction` (+1: next shard's first row, -1:
     previous shard's last row)."""
-    n = jax.lax.axis_size(axis_name)
+    try:
+        n = jax.lax.axis_size(axis_name)
+    except AttributeError:  # older jax: psum of 1 is constant-folded to the size
+        n = jax.lax.psum(1, axis_name)
     if direction > 0:
         edge = jax.lax.slice_in_dim(block, 0, 1, axis=row_axis)  # my first row
         perm = [(i, (i - 1) % n) for i in range(n)]  # send to previous
@@ -98,7 +106,7 @@ def make_sharded_fdtd_step(
         return ex, ey, ez, bx, by, bz
 
     spec = P(z_axis, x_axis)
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         local_step,
         mesh=mesh,
         in_specs=(spec,) * 9,

@@ -1,0 +1,14 @@
+"""Shared test environment: tuned XLA flags before any jax backend init.
+
+Set ``REPRO_HOST_DEVICES=N`` to fake N host devices for in-process sharding
+work (the subprocess-based sharding tests set their own flags and are
+unaffected).
+"""
+import os
+
+from repro.launch import force_host_device_count, set_performance_flags
+
+n = int(os.environ.get("REPRO_HOST_DEVICES", "0"))
+if n:
+    force_host_device_count(n)
+set_performance_flags()

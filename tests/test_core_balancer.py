@@ -1,6 +1,7 @@
 """Tests for the DLB loop (paper Lis. 2.1), efficiency (Eq. 1), perf model (Eq. 2)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,0 +1,48 @@
+"""Cost-measure contracts (paper §2.2)."""
+import numpy as np
+import pytest
+
+from repro.core import HeuristicCost, WorkCounterCost, normalize_costs
+
+
+def test_heuristic_is_raw_weighted_sum():
+    """Pin the contract: cost = w_p*n_p + w_c*n_c, with NO per-component
+    normalization — the weights are per-unit-walltime calibrations, so any
+    population-dependent rescaling would silently change LB decisions."""
+    h = HeuristicCost(particle_weight=0.75, cell_weight=0.25)
+    n_p = np.array([0.0, 10.0, 1000.0, 3.0])
+    n_c = np.array([256.0, 256.0, 256.0, 256.0])
+    np.testing.assert_array_equal(
+        h.measure(n_particles=n_p, n_cells=n_c), 0.75 * n_p + 0.25 * n_c
+    )
+    # doubling the particle population doubles only the particle term —
+    # exactly what per-component normalization would destroy
+    np.testing.assert_array_equal(
+        h.measure(n_particles=2 * n_p, n_cells=n_c), 1.5 * n_p + 0.25 * n_c
+    )
+
+
+def test_heuristic_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        HeuristicCost().measure(n_particles=np.ones(4), n_cells=np.ones(5))
+
+
+def test_work_counter_forwards_and_scales():
+    counters = np.array([4.0, 0.0, 12.0])
+    np.testing.assert_array_equal(
+        WorkCounterCost().measure(work_counters=counters), counters
+    )
+    np.testing.assert_allclose(
+        WorkCounterCost(per_unit_time=1e-9).measure(work_counters=counters),
+        counters * 1e-9,
+    )
+
+
+def test_work_counter_rejects_negative():
+    with pytest.raises(ValueError):
+        WorkCounterCost().measure(work_counters=np.array([1.0, -2.0]))
+
+
+def test_normalize_costs_degenerate():
+    np.testing.assert_allclose(normalize_costs(np.zeros(4)), np.full(4, 0.25))
+    np.testing.assert_allclose(normalize_costs(np.array([1.0, 3.0])), [0.25, 0.75])

@@ -1,6 +1,7 @@
 """Property + unit tests for distribution-mapping policies (paper §2.2)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

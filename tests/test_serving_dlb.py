@@ -2,6 +2,7 @@
 technique — DESIGN.md §Arch-applicability) + property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import efficiency
