@@ -2,6 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV (derived is a JSON object).
 Run as:  PYTHONPATH=src python -m benchmarks.run [--only <module>]
+
+A broken module must not poison the rest of the sweep: its full traceback
+goes to stderr, the CSV gets a short ERROR row, and the remaining modules
+still run; the exit code is non-zero if anything failed.  CI additionally
+runs ``--check-imports`` so a dead import in any module (the historical
+``bench_elastic`` -> missing ``repro.dist`` failure mode) fails the build
+even for modules the lane doesn't execute.
 """
 from __future__ import annotations
 
@@ -28,22 +35,58 @@ MODULES = [
 ]
 
 
+def check_imports() -> int:
+    """Import every benchmark module; report all failures, not just the
+    first.  Returns the number of broken modules."""
+    failures = 0
+    for name in MODULES:
+        try:
+            importlib.import_module(f"benchmarks.{name}")
+            print(f"{name}: import OK")
+        except Exception:
+            failures += 1
+            print(f"{name}: IMPORT FAILED", file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single bench module")
+    ap.add_argument("--out", default=None, help="also write the CSV to this file")
+    ap.add_argument(
+        "--check-imports",
+        action="store_true",
+        help="import every module and exit (non-zero if any import fails)",
+    )
     args = ap.parse_args()
-    modules = [args.only] if args.only else MODULES
 
-    print("name,us_per_call,derived")
+    if args.check_imports:
+        sys.exit(1 if check_imports() else 0)
+
+    modules = [args.only] if args.only else MODULES
+    lines = ["name,us_per_call,derived"]
+    print(lines[0])
     failures = 0
     for name in modules:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             for r in mod.run():
-                print(f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])!r}")
-        except Exception:
+                line = f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])!r}"
+                lines.append(line)
+                print(line)
+        except Exception as e:
             failures += 1
-            print(f"{name},ERROR,{json.dumps(traceback.format_exc()[-500:])!r}")
+            # full traceback to stderr (keeps the CSV parseable), short row
+            # in the CSV, and carry on with the remaining modules
+            print(f"{name}: FAILED", file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
+            line = f"{name},ERROR,{json.dumps(f'{type(e).__name__}: {e}')!r}"
+            lines.append(line)
+            print(line)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
     if failures:
         sys.exit(1)
 

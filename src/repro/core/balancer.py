@@ -188,6 +188,14 @@ class LoadBalancer:
         return None
 
     # ------------------------------------------------------------------
+    def force_rebalance(self) -> None:
+        """Run the LB routine at the next opportunity and adopt any strict
+        improvement, bypassing the threshold gate once.  Used after events
+        that void the gate's premise without changing ``n_devices`` — e.g.
+        a capacity-vector update from the straggler detector (``resize``
+        already implies this for elastic device-set changes)."""
+        self._force_next = True
+
     def set_capacities(self, capacities: Optional[np.ndarray]) -> None:
         """Update per-device capacities (straggler mitigation hook)."""
         if capacities is not None:

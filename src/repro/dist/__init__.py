@@ -1,0 +1,31 @@
+"""Distributed runtime: real multi-device execution of the paper's loop.
+
+Layering (each module usable on its own):
+
+  * ``box_runtime`` — ``BoxRuntime``: per-box field/particle state committed
+    to real devices per the LoadBalancer mapping; halo + emigration
+    exchange between neighbour boxes; device-side work counters feed the
+    balancer; adoption moves box state between devices (``jax.device_put``).
+  * ``elastic`` — ``ElasticRunner`` / ``DeviceSet``: device failure and
+    scale-up mid-run; balancer resize with a one-shot gate bypass.
+  * ``straggler`` — ``StragglerDetector``: EWMA work/time throughput ->
+    capacity vector for the capacity-aware knapsack.
+  * ``sharding`` — logical-axis -> mesh-axis rules (``default_rules`` /
+    ``spec_for`` / ``tree_shardings`` / ``batch_sharding``) shared by
+    ``repro.models`` / ``repro.train`` / ``repro.launch``.
+"""
+from .box_runtime import BoxRuntime
+from .elastic import DeviceSet, ElasticRunner
+from .sharding import batch_sharding, default_rules, spec_for, tree_shardings
+from .straggler import StragglerDetector
+
+__all__ = [
+    "BoxRuntime",
+    "DeviceSet",
+    "ElasticRunner",
+    "StragglerDetector",
+    "batch_sharding",
+    "default_rules",
+    "spec_for",
+    "tree_shardings",
+]

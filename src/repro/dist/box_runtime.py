@@ -1,0 +1,444 @@
+"""Multi-device box runtime: the paper's distribution mapping made physical.
+
+``BoxRuntime`` is the real-device counterpart of the single-host
+``repro.pic.stepper.Simulation`` + ``VirtualCluster`` pair: each AMReX-style
+box owns its field tile and its particles as arrays **committed to one
+device** per the ``LoadBalancer``'s distribution mapping.  One step is:
+
+  1. *Field halo exchange* — every box assembles a ``halo``-padded E/B tile
+     by pulling the overlapping strips of its (periodic) neighbours'
+     interiors onto its own device (``jax.device_put`` per strip; the slice
+     geometry comes from ``repro.pic.boxes.halo_paste_plan``).
+  2. *Particle phase* — ``repro.pic.engine.particle_phase`` runs per box on
+     the box's device (gather, Boris push, move, deposit), in the box-local
+     frame but with domain-global particle coordinates, emitting the
+     in-kernel per-box particle counts and executed-work counters the paper
+     measures in situ.
+  3. *Current halo fold* — deposits that landed in a box's guard cells
+     belong to its neighbours (and vice versa): the padded deposit tiles are
+     summed across the 9-point neighbourhood (``halo_fold_plan``), which
+     reconstructs the exact global current density on every padded tile.
+  4. *Field phase* — ``repro.pic.engine.field_phase`` advances each padded
+     tile (Maxwell leapfrog + laser profile + sponge) and keeps the
+     interior.  With ``halo >= 4`` the three one-cell-deep stencil
+     sub-updates never contaminate the interior, so the distributed fields
+     are the global solver's fields up to f32 rounding.
+  5. *Particle emigration* — particles that crossed a box boundary are
+     exchanged to the box that owns their new position (and killed when they
+     left the physical domain, exactly like the global solver's
+     ``advance_positions``); the receiving box's buffers live on *its*
+     device.
+  6. *Load balancing* — every ``lb_interval`` steps the fetched device-side
+     work counters feed ``LoadBalancer.step``; on adoption the runtime
+     **moves box state between devices** with ``jax.device_put`` (field
+     tile, particle buffers, static tiles) — the paper's redistribution
+     event, for real.
+
+Capacity awareness: ``update_capacities`` forwards a straggler-detector
+capacity vector (``repro.dist.straggler``) into the knapsack and forces a
+rebalance, closing the loop Miller et al. (arXiv:2003.10406) motivate for
+heterogeneous workers.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import LoadBalancer
+from ..pic.boxes import BoxDecomposition, halo_fold_plan, halo_paste_plan
+from ..pic.deposition import box_work_counters
+from ..pic.engine import field_phase, particle_phase
+from ..pic.fields import Fields, make_sponge
+from ..pic.grid import Grid2D
+from ..pic.particles import Particles
+from ..pic.problem import ProblemSetup
+
+__all__ = ["BoxRuntime"]
+
+#: particle stencil support: windowed gather/deposit reach at most 3 cells
+#: outside a box (order-3 shape + one-step excursion), and the field
+#: leapfrog needs 3 valid halo cells — 4 covers both with margin.
+_MIN_HALO = 4
+
+
+def _round_up(n: int, quantum: int) -> int:
+    return max(quantum, int(-(-n // quantum) * quantum))
+
+
+def _np_box_ids(z: np.ndarray, x: np.ndarray, grid: Grid2D) -> np.ndarray:
+    """NumPy twin of ``Grid2D.box_of_position`` for host-side migration."""
+    bz = np.clip((z / (grid.dz * grid.box_nz)).astype(np.int64), 0, grid.boxes_z - 1)
+    bx = np.clip((x / (grid.dx * grid.box_nx)).astype(np.int64), 0, grid.boxes_x - 1)
+    return bz * grid.boxes_x + bx
+
+
+class BoxRuntime:
+    """Step a ``ProblemSetup`` with per-box state placed on real devices.
+
+    Parameters
+    ----------
+    problem:      grid + species + laser (``repro.pic.problem``).
+    n_devices:    devices to spread boxes over (must be visible to jax —
+                  fake host devices via ``XLA_FLAGS=--xla_force_host_
+                  platform_device_count=N`` or ``REPRO_HOST_DEVICES``).
+    lb_interval:  run the LB routine every this many steps (paper: 10).
+    halo:         guard depth of the per-box tiles (>= 4; see module doc).
+    sponge_width / shape_order: as ``SimConfig`` (defaults match it, so a
+                  ``Simulation`` with ``lb_enabled=False`` is the physics
+                  reference).
+    """
+
+    def __init__(
+        self,
+        problem: ProblemSetup,
+        n_devices: int,
+        lb_interval: int = 10,
+        *,
+        halo: int = _MIN_HALO,
+        policy: str = "knapsack",
+        improvement_threshold: float = 0.10,
+        max_boxes_per_device: Optional[float] = 1.5,
+        shape_order: int = 3,
+        sponge_width: int = 8,
+        capacity_margin: float = 2.0,
+        capacity_round: int = 64,
+        devices: Optional[Sequence] = None,
+    ):
+        grid = problem.grid
+        if halo < _MIN_HALO:
+            raise ValueError(f"halo must be >= {_MIN_HALO} (particle stencil support)")
+        if min(grid.box_nz, grid.box_nx) < halo:
+            raise ValueError(
+                f"boxes ({grid.box_nz}x{grid.box_nx}) must be at least halo={halo} wide"
+            )
+        avail = list(devices) if devices is not None else jax.devices()
+        if len(avail) < n_devices:
+            raise RuntimeError(
+                f"need {n_devices} devices but jax sees {len(avail)}; on CPU set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count (or "
+                "REPRO_HOST_DEVICES under pytest) before the first jax import"
+            )
+        self.grid = grid
+        self.laser = problem.laser
+        self.decomp = BoxDecomposition(grid)
+        self.devices = list(avail[:n_devices])
+        self.halo = halo
+        self.shape_order = shape_order
+        self._capacity_round = capacity_round
+        self._capacity_margin = capacity_margin
+        self.t = 0.0
+        self.step_idx = 0
+
+        self.balancer = LoadBalancer(
+            n_devices=n_devices,
+            policy=policy,
+            interval=lb_interval,
+            improvement_threshold=improvement_threshold,
+            max_boxes_per_device=max_boxes_per_device,
+        )
+        self.balancer.ensure_mapping(grid.n_boxes)
+
+        # -- tile geometry ------------------------------------------------
+        pnz, pnx = grid.box_nz + 2 * halo, grid.box_nx + 2 * halo
+        # one box spanning the whole padded tile: particle_phase's per-box
+        # counts then collapse to this box's population
+        self.local_grid = Grid2D(
+            nz=pnz, nx=pnx, dz=grid.dz, dx=grid.dx, box_nz=pnz, box_nx=pnx, cfl=grid.cfl
+        )
+        self._paste = halo_paste_plan(grid, halo)
+        self._fold = halo_fold_plan(grid, halo)
+        # physical origin of each box's padded tile (cell (0,0) of the tile)
+        self._origins = [
+            np.array(
+                [(bz * grid.box_nz - halo) * grid.dz, (bx * grid.box_nx - halo) * grid.dx],
+                np.float32,
+            )
+            for bz, bx in grid.box_coords
+        ]
+
+        # -- static per-box tiles (sponge, laser profile), periodic-padded --
+        sponge_g = np.pad(np.asarray(make_sponge(grid, sponge_width)), halo, mode="wrap")
+        if self.laser is not None:
+            prof_g = np.pad(np.asarray(self.laser.profile(grid)), halo, mode="wrap")
+        else:
+            prof_g = np.zeros_like(sponge_g)
+        self._static_host: List[np.ndarray] = []
+        for bz, bx in grid.box_coords:
+            sz = slice(bz * grid.box_nz, bz * grid.box_nz + pnz)
+            sx = slice(bx * grid.box_nx, bx * grid.box_nx + pnx)
+            self._static_host.append(
+                np.stack([sponge_g[sz, sx], prof_g[sz, sx]]).astype(np.float32)
+            )
+        self._static: List[jax.Array] = [None] * grid.n_boxes
+
+        # -- state: field tiles + per-box particle buffers ------------------
+        self.field_tiles: List[jax.Array] = [
+            jnp.zeros((6, grid.box_nz, grid.box_nx), jnp.float32)
+            for _ in range(grid.n_boxes)
+        ]
+        self.boxes: List[Tuple[Particles, ...]] = [None] * grid.n_boxes
+        self._species_template = problem.species
+        self._caps = [0] * len(problem.species)
+        self._counts = np.zeros(grid.n_boxes, np.float64)
+        self._distribute_initial(problem.species)
+        self._place(range(grid.n_boxes))
+
+        # -- jitted per-box phases (one trace; XLA re-specializes per device)
+        local, dom, order = self.local_grid, self.grid, self.shape_order
+        h = self.halo
+
+        def particle_step(padded6, species, origin):
+            f = Fields(*padded6)
+            species, (jx, jy, jz), counts = particle_phase(
+                f, species, local, order, domain_grid=dom, origin=(origin[0], origin[1])
+            )
+            work = box_work_counters(counts, dom)
+            return species, jnp.stack([jx, jy, jz]), counts[0], work[0]
+
+        laser = self.laser
+
+        def field_step(padded6, padded_j3, static2, t):
+            f = field_phase(
+                Fields(*padded6),
+                tuple(padded_j3),
+                local,
+                sponge=static2[0],
+                laser=laser,
+                t=t,
+                laser_profile=static2[1],
+            )
+            return jnp.stack(f)[:, h:-h, h:-h]
+
+        self._particle_fn = jax.jit(particle_step)
+        self._field_fn = jax.jit(field_step)
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+    def device_of(self, box: int):
+        return self.devices[int(self.balancer.mapping[box])]
+
+    def _place(self, boxes) -> None:
+        """(Re)commit the listed boxes' state to their mapped devices — the
+        redistribution event on LB adoption, and the initial placement.
+        (``device_put`` onto the array's current device is a no-copy no-op,
+        so re-placing an unmoved box is free; the host-resident static
+        tiles upload once and afterwards move device-to-device.)"""
+        for b in boxes:
+            d = self.device_of(b)
+            self.field_tiles[b] = jax.device_put(self.field_tiles[b], d)
+            self.boxes[b] = jax.device_put(self.boxes[b], d)
+            if self._static[b] is None:
+                self._static[b] = jax.device_put(jnp.asarray(self._static_host[b]), d)
+            else:
+                self._static[b] = jax.device_put(self._static[b], d)
+
+    def apply_mapping(self, new_mapping) -> None:
+        """Adopt an externally-decided distribution mapping: update the
+        balancer and move every reassigned box's state to its new device."""
+        new = np.asarray(new_mapping, dtype=np.int64)
+        if new.shape != (self.grid.n_boxes,) or new.min() < 0 or new.max() >= len(self.devices):
+            raise ValueError("mapping must assign every box to a valid device slot")
+        old = self.balancer.mapping
+        self.balancer.mapping = new
+        changed = range(self.grid.n_boxes) if old is None else np.nonzero(new != old)[0]
+        self._place(changed)
+
+    # ------------------------------------------------------------------
+    # particles: initial split + emigration exchange
+    # ------------------------------------------------------------------
+    def _filler(self, box: int, n: int, template: Particles) -> Dict[str, np.ndarray]:
+        """Dead padding particles parked at the box centre (positions must
+        stay inside the domain so index math is always in range)."""
+        bz, bx = self.grid.box_coords[box]
+        zc = (bz + 0.5) * self.grid.box_nz * self.grid.dz
+        xc = (bx + 0.5) * self.grid.box_nx * self.grid.dx
+        return {
+            "z": np.full(n, zc, np.float32),
+            "x": np.full(n, xc, np.float32),
+            "ux": np.zeros(n, np.float32),
+            "uy": np.zeros(n, np.float32),
+            "uz": np.zeros(n, np.float32),
+            "w": np.zeros(n, np.float32),
+            "alive": np.zeros(n, bool),
+        }
+
+    def _pack_boxes(self, pooled: List[Dict[str, np.ndarray]]) -> None:
+        """Distribute per-species host pools (alive particles only) into
+        fixed-capacity per-box buffers committed to the owner devices."""
+        grid = self.grid
+        per_box: List[List[Particles]] = [[] for _ in range(grid.n_boxes)]
+        total = np.zeros(grid.n_boxes, np.float64)
+        for s, (pool, tpl) in enumerate(zip(pooled, self._species_template)):
+            ids = _np_box_ids(pool["z"], pool["x"], grid)
+            order = np.argsort(ids, kind="stable")
+            bounds = np.searchsorted(ids[order], np.arange(grid.n_boxes + 1))
+            counts = np.diff(bounds)
+            need = _round_up(int(counts.max() * self._capacity_margin) if len(ids) else 0,
+                             self._capacity_round)
+            self._caps[s] = max(self._caps[s], need)
+            cap = self._caps[s]
+            for b in range(grid.n_boxes):
+                sel = order[bounds[b]:bounds[b + 1]]
+                buf = self._filler(b, cap, tpl)
+                n = len(sel)
+                for k in ("z", "x", "ux", "uy", "uz", "w"):
+                    buf[k][:n] = pool[k][sel]
+                buf["alive"][:n] = True
+                per_box[b].append(
+                    jax.device_put(
+                        Particles(
+                            z=jnp.asarray(buf["z"]), x=jnp.asarray(buf["x"]),
+                            ux=jnp.asarray(buf["ux"]), uy=jnp.asarray(buf["uy"]),
+                            uz=jnp.asarray(buf["uz"]), w=jnp.asarray(buf["w"]),
+                            alive=jnp.asarray(buf["alive"]), q=tpl.q, m=tpl.m,
+                        ),
+                        self.device_of(b),
+                    )
+                )
+                total[b] += n
+        self.boxes = [tuple(sp) for sp in per_box]
+        self._counts = total
+
+    def _distribute_initial(self, species: Tuple[Particles, ...]) -> None:
+        pooled = []
+        for p in species:
+            host = jax.device_get((p.z, p.x, p.ux, p.uy, p.uz, p.w, p.alive))
+            z, x, ux, uy, uz, w, alive = (np.asarray(a) for a in host)
+            keep = alive
+            pooled.append(
+                {"z": z[keep], "x": x[keep], "ux": ux[keep], "uy": uy[keep],
+                 "uz": uz[keep], "w": w[keep]}
+            )
+        self._pack_boxes(pooled)
+
+    def _exchange_particles(self, stepped: List[Tuple[Particles, ...]]) -> None:
+        """Emigration: pool each species across boxes (dropping particles the
+        push killed at the domain boundary) and repack by current position;
+        ``_pack_boxes`` commits each rebuilt buffer to its owner device.
+        Boxes whose membership is unchanged still get a fresh buffer; the
+        repack is O(total particles) on the host, once per step.  Field
+        tiles and static tiles are NOT touched here — they move only on
+        adoption."""
+        n_species = len(self._species_template)
+        pooled = []
+        for s in range(n_species):
+            zs, xs, uxs, uys, uzs, ws = [], [], [], [], [], []
+            for b in range(self.grid.n_boxes):
+                p = stepped[b][s]
+                host = jax.device_get((p.z, p.x, p.ux, p.uy, p.uz, p.w, p.alive))
+                z, x, ux, uy, uz, w, alive = (np.asarray(a) for a in host)
+                zs.append(z[alive]); xs.append(x[alive]); uxs.append(ux[alive])
+                uys.append(uy[alive]); uzs.append(uz[alive]); ws.append(w[alive])
+            pooled.append(
+                {"z": np.concatenate(zs), "x": np.concatenate(xs),
+                 "ux": np.concatenate(uxs), "uy": np.concatenate(uys),
+                 "uz": np.concatenate(uzs), "w": np.concatenate(ws)}
+            )
+        self._pack_boxes(pooled)
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+    def _assemble(self, sources: List[jax.Array], plan, box: int, channels: int):
+        """Gather/sum plan strips onto ``box``'s device (the halo exchange)."""
+        d = self.device_of(box)
+        pnz, pnx = self.local_grid.shape
+        out = jax.device_put(jnp.zeros((channels, pnz, pnx), jnp.float32), d)
+        for src, (tz, tx), (sz, sx) in plan:
+            strip = jax.device_put(sources[src][:, sz, sx], d)
+            out = out.at[:, tz, tx].add(strip)
+        return out
+
+    def step(self) -> Dict[str, float]:
+        """Advance one PIC step across all boxes; run the LB routine when
+        due.  Returns host-side diagnostics for this step."""
+        n_boxes = self.grid.n_boxes
+        t = np.float32(self.t)
+
+        # 1. field halo exchange -> padded E/B tiles on each owner device
+        padded_f = [self._assemble(self.field_tiles, self._paste[b], b, 6)
+                    for b in range(n_boxes)]
+        # 2. particle phase per box (device-side counts + work counters)
+        stepped, j_padded, work_dev = [], [], []
+        for b in range(n_boxes):
+            sp, j, _count, work = self._particle_fn(
+                padded_f[b], self.boxes[b], self._origins[b]
+            )
+            stepped.append(sp)
+            j_padded.append(j)
+            work_dev.append(work)
+        # 3. current halo fold -> exact global J on each padded tile
+        padded_j = [self._assemble(j_padded, self._fold[b], b, 3)
+                    for b in range(n_boxes)]
+        # 4. field phase per box, keep interiors
+        self.field_tiles = [
+            self._field_fn(padded_f[b], padded_j[b], self._static[b], t)
+            for b in range(n_boxes)
+        ]
+        # 5. particle emigration between boxes (and domain-exit kills)
+        self._exchange_particles(stepped)
+
+        # 6. LB round: device-side work counters -> knapsack -> adoption
+        adopted = False
+        if self.balancer.should_run(self.step_idx):
+            costs = np.asarray(jax.device_get(work_dev), np.float64)
+            old = self.balancer.mapping.copy()
+            new_mapping = self.balancer.step(
+                self.step_idx,
+                costs,
+                box_coords=self.decomp.coords,
+                box_bytes=self.decomp.box_bytes(self._counts),
+            )
+            if new_mapping is not None:
+                adopted = True
+                self._place(np.nonzero(new_mapping != old)[0])
+
+        self.step_idx += 1
+        self.t += self.grid.dt
+        return {
+            "step": self.step_idx,
+            "alive": float(self._counts.sum()),
+            "adopted": adopted,
+        }
+
+    def run(self, n_steps: int) -> None:
+        for _ in range(n_steps):
+            self.step()
+
+    # ------------------------------------------------------------------
+    # capacity awareness (straggler mitigation hook)
+    # ------------------------------------------------------------------
+    def update_capacities(self, capacities: Optional[np.ndarray]) -> None:
+        """Feed a per-device capacity vector (e.g. from
+        ``repro.dist.straggler.StragglerDetector``) into the knapsack and
+        force the next LB round to rebalance against it."""
+        self.balancer.set_capacities(capacities)
+        self.balancer.force_rebalance()
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def total_alive(self) -> int:
+        return int(self._counts.sum())
+
+    def box_counts(self) -> np.ndarray:
+        """Alive particles per box (all species), from the last exchange."""
+        return self._counts.copy()
+
+    @property
+    def fields(self) -> Fields:
+        """The global field state assembled from the per-box tiles."""
+        out = np.zeros((6, self.grid.nz, self.grid.nx), np.float32)
+        for b, (bz, bx) in enumerate(self.grid.box_coords):
+            sz = slice(bz * self.grid.box_nz, (bz + 1) * self.grid.box_nz)
+            sx = slice(bx * self.grid.box_nx, (bx + 1) * self.grid.box_nx)
+            out[:, sz, sx] = np.asarray(jax.device_get(self.field_tiles[b]))
+        return Fields(*(jnp.asarray(c) for c in out))
+
+    def devices_in_use(self) -> List[int]:
+        """Distinct device ids currently holding box state."""
+        return sorted({self.device_of(b).id for b in range(self.grid.n_boxes)})

@@ -1,0 +1,120 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter in ``repro.models`` carries a tuple of *logical* axis names
+(``("embed", "ff")`` etc.); this module maps them onto mesh axes to build
+``NamedSharding``s for pjit.  The same rule table serves training
+(``repro.train`` via ``launch/dryrun``), serving, and the distributed PIC
+layer — one place to decide what is data-, tensor- or expert-parallel.
+
+``spec_for`` applies two safety fallbacks per dimension:
+  * divisibility — a dim not divisible by its mesh-axis extent is
+    replicated instead of unevenly sharded;
+  * single use — a mesh axis may shard at most one dim of an array; later
+    dims asking for an already-used axis are replicated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["default_rules", "spec_for", "tree_shardings", "batch_sharding"]
+
+#: a rule value: one mesh axis, several (sharded jointly), or replicate
+Rule = Union[str, Tuple[str, ...], None]
+
+
+def default_rules(mesh: Mesh, *, expert_sharding: str = "tp") -> Dict[Optional[str], Rule]:
+    """FSDP + tensor-parallel rule table for ``mesh``.
+
+    Batch and the embed (feature) axis shard over the data-parallel axes
+    ('pod' spans the slow inter-pod links and carries only batch); vocab,
+    ff and the fused head dims shard over 'model'.  ``expert_sharding``:
+    'tp' keeps tensor parallelism inside each expert (experts replicated),
+    'ep' puts the expert axis on 'model' (expert parallelism) — the
+    divisibility/reuse fallbacks in :func:`spec_for` then replicate the ff
+    dim automatically.
+    """
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    model = "model" if "model" in names else None
+    rules: Dict[Optional[str], Rule] = {
+        None: None,
+        "batch": dp or None,
+        "embed": "data" if "data" in names else None,  # FSDP weight shard
+        "embed2": None,
+        "vocab": model,
+        "ff": model,
+        "ff2": model,
+        "heads_x_hd": model,
+        "kv_x_hd": model,
+        "experts": model if expert_sharding == "ep" else None,
+        "layers": None,  # scanned stack axis stays local
+    }
+    return rules
+
+
+def _axes_tuple(rule: Rule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    return (rule,) if isinstance(rule, str) else tuple(rule)
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: Dict[Optional[str], Rule],
+    mesh,
+) -> P:
+    """PartitionSpec for an array with logical ``axes`` and ``shape``."""
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        rule = rules.get(name)
+        mesh_axes = _axes_tuple(rule)
+        if not mesh_axes:
+            entries.append(None)
+            continue
+        extent = math.prod(mesh.shape[a] for a in mesh_axes)
+        if any(a in used for a in mesh_axes) or extent <= 0 or dim % extent != 0:
+            entries.append(None)  # replicate: not divisible, or axis taken
+            continue
+        used.update(mesh_axes)
+        entries.append(rule if isinstance(rule, str) else tuple(mesh_axes))
+    return P(*entries)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh, rules) -> object:
+    """NamedShardings for a whole parameter pytree.
+
+    ``axes_tree`` holds logical-axis tuples (the ``specs`` returned by
+    ``repro.models.init_params``); ``shapes_tree`` the matching arrays or
+    ShapeDtypeStructs.
+    """
+    return jax.tree.map(
+        lambda ax, leaf: NamedSharding(mesh, spec_for(ax, leaf.shape, rules, mesh)),
+        axes_tree,
+        shapes_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def batch_sharding(mesh: Mesh, rules, *, shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    """Sharding for batch-leading arrays (tokens, labels, decode tokens):
+    dim 0 over the data-parallel axes, everything else replicated, with the
+    same divisibility fallback as :func:`spec_for` when ``shape`` is given
+    (global_batch=1 decode must not be unevenly split)."""
+    axes = _axes_tuple(rules.get("batch"))
+    ndim = len(shape) if shape is not None else 2
+    if not axes:
+        return NamedSharding(mesh, P())
+    extent = math.prod(mesh.shape[a] for a in axes)
+    if shape is not None and (len(shape) == 0 or shape[0] % extent != 0):
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(tuple(axes), *([None] * (ndim - 1))))

@@ -15,7 +15,7 @@ import numpy as np
 
 from .grid import Grid2D
 
-__all__ = ["BoxDecomposition"]
+__all__ = ["BoxDecomposition", "halo_paste_plan", "halo_fold_plan"]
 
 
 @dataclass
@@ -56,3 +56,80 @@ class BoxDecomposition:
         return np.full(
             self.n_boxes, self.grid.box_surface_cells * self.bytes_per_cell, dtype=np.float64
         )
+
+
+# ---------------------------------------------------------------------------
+# Halo-exchange slice plans (periodic, 9-point neighbourhood)
+#
+# The distributed runtime keeps one tile per box on its owner device and
+# communicates via strip copies.  Both directions reduce to pure slice
+# geometry computed once here:
+#
+#   * paste: build a halo-padded tile for box b by copying the overlapping
+#     pieces of every neighbour *interior* (gather — used for E/B fields
+#     before the particle phase, and for the current-density tiles after the
+#     cross-box current sum).
+#   * fold: sum the overlapping pieces of every neighbour's *padded* deposit
+#     tile into box b's padded frame (scatter-add — a particle near a box
+#     edge deposits current into its neighbours' cells, and a particle that
+#     crossed an edge this step deposits back into its old neighbourhood).
+#
+# Periodicity is handled by planning over ring-shifted *images* (delta in
+# {-1, 0, 1}^2 of box coordinates, wrapped), which also covers degenerate
+# decompositions where a box is its own wrap-around neighbour.
+# ---------------------------------------------------------------------------
+
+
+def _plan(grid: Grid2D, halo: int, src_halo: int):
+    bs_z, bs_x = grid.box_nz, grid.box_nx
+    if halo < 1 or halo > min(bs_z, bs_x):
+        raise ValueError(
+            f"halo must be in [1, min(box_nz, box_nx)] = [1, {min(bs_z, bs_x)}], got {halo}"
+        )
+    plans = []
+    for bz, bx in grid.box_coords:
+        t0z, t0x = bz * bs_z - halo, bx * bs_x - halo  # padded-frame origin
+        t1z, t1x = t0z + bs_z + 2 * halo, t0x + bs_x + 2 * halo
+        entries = []
+        for dz in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                src = ((bz + dz) % grid.boxes_z) * grid.boxes_x + (bx + dx) % grid.boxes_x
+                # image origin of the source tile in the target's unwrapped frame
+                i0z = (bz + dz) * bs_z - src_halo
+                i0x = (bx + dx) * bs_x - src_halo
+                oz0, oz1 = max(t0z, i0z), min(t1z, i0z + bs_z + 2 * src_halo)
+                ox0, ox1 = max(t0x, i0x), min(t1x, i0x + bs_x + 2 * src_halo)
+                if oz1 <= oz0 or ox1 <= ox0:
+                    continue
+                entries.append(
+                    (
+                        int(src),
+                        (slice(oz0 - t0z, oz1 - t0z), slice(ox0 - t0x, ox1 - t0x)),
+                        (slice(oz0 - i0z, oz1 - i0z), slice(ox0 - i0x, ox1 - i0x)),
+                    )
+                )
+        plans.append(entries)
+    return plans
+
+
+def halo_paste_plan(grid: Grid2D, halo: int):
+    """Per-box recipe assembling a ``halo``-padded tile from box interiors.
+
+    Returns, for each box, a list of ``(src_box, target_slices, src_slices)``
+    where ``src_slices`` index the source box's *interior* tile
+    ``(box_nz, box_nx)`` and ``target_slices`` index the padded tile
+    ``(box_nz + 2*halo, box_nx + 2*halo)``.  Target regions are disjoint and
+    cover the padded tile exactly.
+    """
+    return _plan(grid, halo, src_halo=0)
+
+
+def halo_fold_plan(grid: Grid2D, halo: int):
+    """Per-box recipe summing neighbour *padded* deposit tiles into a box's
+    padded frame.  ``src_slices`` index the source box's padded tile; target
+    regions overlap, so contributions must be **added**.  With deposits
+    reaching at most ``halo`` cells outside the depositing box (one-step
+    excursion + stencil reach), the sum reproduces the global current
+    density on the whole padded tile.
+    """
+    return _plan(grid, halo, src_halo=halo)

@@ -6,11 +6,19 @@ costs every ``lb_interval`` steps, so nothing in the hot loop should touch
 the host more often than that.  This module provides the pure, jitted side
 of that contract:
 
+  * :func:`particle_phase` / :func:`field_phase` — the two halves of one
+    PIC step (gather+push+move+deposit, then the Maxwell leapfrog with
+    laser/sponge).  They are exposed separately because the distributed box
+    runtime (``repro.dist.box_runtime``) must interleave a cross-box
+    current-halo exchange between them; both accept a *local* grid plus an
+    ``origin``/``domain_grid`` so the same physics runs on a halo-padded
+    per-box tile as on the global grid.
   * :func:`build_step_body` — one PIC step as a pure function
-    ``(fields, species, t) -> (fields, species, StepOutputs)``.  All per-box
-    accounting (particle counts, executed-work counters) is computed
-    device-side inside the body; the Pallas path threads the in-kernel
-    counters straight out of ``repro.kernels`` instead of recomputing them.
+    ``(fields, species, t) -> (fields, species, StepOutputs)``, composed
+    from the two phases.  All per-box accounting (particle counts,
+    executed-work counters) is computed device-side inside the body; the
+    Pallas path threads the in-kernel counters straight out of
+    ``repro.kernels`` instead of recomputing them.
   * :func:`make_interval_fn` — wraps the step body in a ``jax.lax.scan``
     over ``n_steps`` steps with **donated** field/particle buffers
     (``donate_argnums``), so the interval runs as one XLA computation with
@@ -42,7 +50,13 @@ from .particles import (
     kinetic_energy,
 )
 
-__all__ = ["StepOutputs", "build_step_body", "make_interval_fn"]
+__all__ = [
+    "StepOutputs",
+    "particle_phase",
+    "field_phase",
+    "build_step_body",
+    "make_interval_fn",
+]
 
 
 class StepOutputs(NamedTuple):
@@ -56,6 +70,80 @@ class StepOutputs(NamedTuple):
     work: jax.Array  # (n_boxes,) f32 — executed work units (in-kernel counters)
     field_energy: jax.Array  # scalar f32
     kinetic_energy: jax.Array  # scalar f32
+
+
+def particle_phase(
+    fields: Fields,
+    species: Tuple[Particles, ...],
+    grid: Grid2D,
+    shape_order: int = 3,
+    *,
+    domain_grid: Optional[Grid2D] = None,
+    origin: Tuple = (0.0, 0.0),
+):
+    """Gather + Boris push + move + current deposit for all species.
+
+    ``grid`` is the grid the *fields* live on — the global grid for the
+    single-host engine, or a halo-padded per-box tile in the distributed
+    runtime.  ``origin`` is the physical position of ``grid``'s cell (0, 0)
+    in the domain frame (particles keep domain-global positions so box
+    migration never rebases coordinates), and ``domain_grid`` bounds the
+    kill-at-boundary check (defaults to ``grid``).
+
+    Returns ``(species', (jx, jy, jz), counts)`` with ``counts`` the alive
+    particles per box of ``grid`` — for a padded tile whose box is the whole
+    tile this is a 1-vector holding the box's population.
+    """
+    dom = grid if domain_grid is None else domain_grid
+    oz, ox = origin
+    shifted = not (isinstance(oz, float) and isinstance(ox, float) and oz == 0.0 and ox == 0.0)
+    jx = jnp.zeros(grid.shape, jnp.float32)
+    jy = jnp.zeros(grid.shape, jnp.float32)
+    jz = jnp.zeros(grid.shape, jnp.float32)
+    counts = jnp.zeros(grid.n_boxes, jnp.float32)
+    out_species = []
+    for p in species:
+        z_loc = p.z - oz if shifted else p.z
+        x_loc = p.x - ox if shifted else p.x
+        eb = gather_fields(fields, z_loc, x_loc, grid, shape_order)
+        p = advance_positions(boris_push(p, eb, grid.dt), dom, grid.dt)
+        out_species.append(p)
+        p_loc = p._replace(z=p.z - oz, x=p.x - ox) if shifted else p
+        jx_, jy_, jz_ = deposit_current(p_loc, grid, shape_order)
+        jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
+        counts = counts + box_particle_counts(p_loc, grid)
+    return tuple(out_species), (jx, jy, jz), counts
+
+
+def field_phase(
+    fields: Fields,
+    j,
+    grid: Grid2D,
+    *,
+    sponge: Optional[jax.Array] = None,
+    laser=None,
+    t=0.0,
+    laser_profile: Optional[jax.Array] = None,
+) -> Fields:
+    """Maxwell leapfrog (B half, E full, B half) + laser injection + sponge.
+
+    ``laser_profile`` selects the offset-aware injection path (a fixed
+    spatial profile times a time-dependent scalar — see
+    ``LaserAntenna.inject_profile``) used by per-box tiles whose frame
+    differs from the global grid; without it the antenna injects on its
+    global row as before.
+    """
+    fields = step_b_half(fields, grid)
+    fields = step_e(fields, j, grid)
+    fields = step_b_half(fields, grid)
+    if laser is not None:
+        if laser_profile is None:
+            fields = laser.inject(fields, grid, t)
+        else:
+            fields = laser.inject_profile(fields, laser_profile, grid, t)
+    if sponge is not None:
+        fields = apply_sponge(fields, sponge)
+    return fields
 
 
 def build_step_body(
@@ -98,28 +186,14 @@ def build_step_body(
                 work = work + counters.astype(jnp.float32)
             species = tuple(new_species)
         else:
-            # push + move all species with E^n, B^n
-            species = tuple(
-                advance_positions(
-                    boris_push(p, gather_fields(fields, p.z, p.x, grid, shape_order), dt),
-                    grid,
-                    dt,
-                )
-                for p in species
+            # push + move + deposit all species with E^n, B^n
+            species, (jx, jy, jz), counts = particle_phase(
+                fields, species, grid, shape_order
             )
-            for p in species:
-                jx_, jy_, jz_ = deposit_current(p, grid, shape_order)
-                jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
-                counts = counts + box_particle_counts(p, grid)
             work = box_work_counters(counts, grid)
-        # Maxwell: B half, E full, B half
-        fields = step_b_half(fields, grid)
-        fields = step_e(fields, (jx, jy, jz), grid)
-        fields = step_b_half(fields, grid)
-        if laser is not None:
-            fields = laser.inject(fields, grid, t)
-        if sponge is not None:
-            fields = apply_sponge(fields, sponge)
+        fields = field_phase(
+            fields, (jx, jy, jz), grid, sponge=sponge, laser=laser, t=t
+        )
         out = StepOutputs(
             counts=counts,
             work=work,

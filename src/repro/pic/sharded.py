@@ -11,9 +11,15 @@ that wrap-around.
 
 This is the field-side counterpart of the particle-side
 ``repro.dist.box_runtime``: together they are the production layout
-(fields block-sharded; particle boxes owned per the distribution mapping).
-The halo exchange is also the communication term the SFC-vs-knapsack
-discussion in the paper is about — co-located neighbours skip the link.
+(fields block-sharded; particle boxes owned per the distribution mapping —
+the box runtime exchanges its halos explicitly per box, this module lets
+XLA schedule them as ppermute collectives inside one program).  The halo
+exchange is also the communication term the SFC-vs-knapsack discussion in
+the paper is about — co-located neighbours skip the link.
+
+Version compatibility: the ``jax.shard_map`` / ``jax.lax.axis_size``
+fallbacks below define the repo's minimum supported jax (0.4.30); the CI
+fast lane runs a {minimum, latest} jax matrix so they stay exercised.
 """
 from __future__ import annotations
 

@@ -1,0 +1,184 @@
+"""In-process `repro.dist` runtime tests (fast-lane friendly).
+
+These complement the slow 8-device subprocess validation in
+``test_distributed_pic.py``: everything here runs in the main pytest
+process.  Tests that need more than one device skip unless the process was
+started with multiple host devices (``REPRO_HOST_DEVICES=2`` or more — the
+multi-device CI lane sets 8; ``tests/conftest.py`` applies the XLA flag
+before jax initializes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices; run with REPRO_HOST_DEVICES=2 (see conftest)",
+)
+
+
+# ---------------------------------------------------------------------------
+# halo slice plans (pure geometry, no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_halo_paste_plan_reconstructs_periodic_padding():
+    from repro.pic.boxes import halo_paste_plan
+    from repro.pic.grid import Grid2D
+
+    grid = Grid2D(nz=24, nx=16, dz=0.3, dx=0.3, box_nz=8, box_nx=8)
+    halo = 4
+    rng = np.random.default_rng(0)
+    global_f = rng.normal(0, 1, (1, grid.nz, grid.nx))
+    tiles = []
+    for bz, bx in grid.box_coords:
+        tiles.append(global_f[:, bz * 8:(bz + 1) * 8, bx * 8:(bx + 1) * 8])
+
+    padded_g = np.pad(global_f, ((0, 0), (halo, halo), (halo, halo)), mode="wrap")
+    for b, entries in enumerate(halo_paste_plan(grid, halo)):
+        bz, bx = grid.box_coords[b]
+        out = np.zeros((1, 8 + 2 * halo, 8 + 2 * halo))
+        covered = np.zeros(out.shape, bool)
+        for src, (tz, tx), (sz, sx) in entries:
+            out[:, tz, tx] += tiles[src][:, sz, sx]
+            assert not covered[:, tz, tx].any(), "paste regions must be disjoint"
+            covered[:, tz, tx] = True
+        assert covered.all(), "paste plan must cover the padded tile"
+        expect = padded_g[:, bz * 8:bz * 8 + 16, bx * 8:bx * 8 + 16]
+        np.testing.assert_allclose(out, expect)
+
+
+def test_halo_fold_plan_sums_to_global_deposit():
+    from repro.pic.boxes import halo_fold_plan
+    from repro.pic.grid import Grid2D
+
+    grid = Grid2D(nz=16, nx=24, dz=0.3, dx=0.3, box_nz=8, box_nx=8)
+    halo = 4
+    pn = 8 + 2 * halo
+    rng = np.random.default_rng(1)
+    deposits = [rng.normal(0, 1, (1, pn, pn)) for _ in range(grid.n_boxes)]
+
+    # reference: scatter every padded deposit into the global grid with wrap
+    global_j = np.zeros((1, grid.nz, grid.nx))
+    for b, (bz, bx) in enumerate(grid.box_coords):
+        for i in range(pn):
+            for k in range(pn):
+                gz = (bz * 8 - halo + i) % grid.nz
+                gx = (bx * 8 - halo + k) % grid.nx
+                global_j[:, gz, gx] += deposits[b][:, i, k]
+
+    padded_g = np.pad(global_j, ((0, 0), (halo, halo), (halo, halo)), mode="wrap")
+    for b, entries in enumerate(halo_fold_plan(grid, halo)):
+        bz, bx = grid.box_coords[b]
+        out = np.zeros((1, pn, pn))
+        for src, (tz, tx), (sz, sx) in entries:
+            out[:, tz, tx] += deposits[src][:, sz, sx]
+        expect = padded_g[:, bz * 8:bz * 8 + pn, bx * 8:bx * 8 + pn]
+        np.testing.assert_allclose(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# BoxRuntime physics + migration
+# ---------------------------------------------------------------------------
+
+
+def _small_problem(seed=0):
+    from repro.pic import laser_ion_problem
+
+    return laser_ion_problem(nz=32, nx=32, box_cells=8, ppc=2, seed=seed)
+
+
+def test_box_runtime_matches_reference_single_device():
+    """The distributed step (halo exchange + per-box phases + emigration)
+    reproduces the global solver's fields and conserves particles."""
+    from repro.dist.box_runtime import BoxRuntime
+    from repro.pic import Simulation, SimConfig
+    from repro.pic.fields import field_energy
+
+    rt = BoxRuntime(_small_problem(), n_devices=1, lb_interval=2)
+    n0 = rt.total_alive()
+    rt.run(3)
+    assert rt.total_alive() == n0
+    assert rt.box_counts().sum() == n0
+
+    ref = Simulation(_small_problem(), SimConfig(lb_enabled=False, sponge_width=8))
+    ref.run(3)
+    e_rt = float(field_energy(rt.fields, rt.grid))
+    e_ref = float(ref.history["field_energy"][-1])
+    assert e_rt == pytest.approx(e_ref, rel=1e-4)
+    f_rt = np.stack([np.asarray(c) for c in rt.fields])
+    f_ref = np.stack([np.asarray(c) for c in ref.fields])
+    scale = np.abs(f_ref).max()
+    assert np.abs(f_rt - f_ref).max() <= 1e-5 * max(scale, 1e-30)
+
+
+@multi_device
+def test_adoption_migration_preserves_state_on_2_devices():
+    """Box-state migration on adoption: ``device_put`` moves every
+    reassigned box to its new device and preserves particle count, dtypes
+    and single-device placement."""
+    from repro.dist.box_runtime import BoxRuntime
+
+    rt = BoxRuntime(_small_problem(), n_devices=2, lb_interval=1000)
+    n0 = rt.total_alive()
+    before = rt.boxes[0][0]
+    flipped = 1 - np.asarray(rt.balancer.mapping)
+
+    rt.apply_mapping(flipped)
+
+    for b in range(rt.grid.n_boxes):
+        want = rt.devices[flipped[b]]
+        assert rt.field_tiles[b].devices() == {want}
+        for p in rt.boxes[b]:
+            for leaf in (p.z, p.x, p.ux, p.w, p.alive):
+                assert leaf.devices() == {want}
+    after = rt.boxes[0][0]
+    assert after.z.dtype == before.z.dtype == jnp.float32
+    assert after.alive.dtype == before.alive.dtype == jnp.bool_
+    assert rt.total_alive() == n0
+
+    # the runtime keeps stepping correctly across the migrated placement
+    rt.step()
+    assert rt.total_alive() == n0
+    assert set(rt.devices_in_use()) == {d.id for d in rt.devices}
+
+
+@multi_device
+def test_box_runtime_spreads_state_across_devices():
+    from repro.dist.box_runtime import BoxRuntime
+
+    rt = BoxRuntime(_small_problem(), n_devices=2, lb_interval=2)
+    used = set()
+    for sp in rt.boxes:
+        for st in sp:
+            used.add(st.z.devices().pop().id)
+    assert len(used) == 2
+
+
+# ---------------------------------------------------------------------------
+# sharding rules against the real parameter trees
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_tree_shardings_place_real_param_tree():
+    """`default_rules` + `tree_shardings` must produce placeable shardings
+    for every logical axis the model zoo emits (the dryrun contract)."""
+    from repro.configs import get_config
+    from repro.dist.sharding import batch_sharding, default_rules, tree_shardings
+    from repro.models import init_params
+
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    for arch in ("yi-9b", "mixtral-8x7b"):
+        cfg = get_config(arch, smoke=True)
+        params, specs = init_params(jax.random.PRNGKey(0), cfg)
+        rules = default_rules(mesh, expert_sharding=cfg.expert_sharding)
+        shardings = tree_shardings(specs, params, mesh, rules)
+        placed = jax.device_put(params, shardings)
+        total = sum(float(jnp.sum(jnp.abs(x).astype(jnp.float32))) for x in jax.tree.leaves(placed))
+        assert np.isfinite(total)
+
+    bs = batch_sharding(mesh, default_rules(mesh), shape=(4, 16))
+    tok = jax.device_put(jnp.zeros((4, 16), jnp.int32), bs)
+    assert np.isfinite(float(jnp.sum(tok)))
