@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV (derived is a JSON object).
 Run as:  PYTHONPATH=src python -m benchmarks.run [--only <module>]
+``--help`` lists every module with the first line of its docstring;
+``docs/benchmarks.md`` documents what each measures and how to read its
+output.
 
 A broken module must not poison the rest of the sweep: its full traceback
 goes to stderr, the CSV gets a short ERROR row, and the remaining modules
@@ -13,26 +16,51 @@ even for modules the lane doesn't execute.
 from __future__ import annotations
 
 import argparse
+import ast
 import importlib
 import json
+import os
 import sys
 import traceback
 
 MODULES = [
-    "bench_step_fusion",    # device-resident interval engine vs per-step/seed
-    "bench_cost_schemes",   # Fig 6a group 1 + Fig 3
-    "bench_policies",       # Fig 6a group 2 + Fig 4
-    "bench_box_size",       # Fig 6a group 3
-    "bench_interval",       # Fig 6a group 4
-    "bench_threshold",      # Fig 6a group 5
-    "bench_speedup",        # Fig 6b + Fig 5
-    "bench_strong_scaling", # Fig 7
-    "bench_weak_scaling",   # Fig 8
-    "bench_moe_dlb",        # paper technique -> MoE expert parallelism
-    "bench_elastic",        # fault tolerance / checkpoint (runnability)
-    "bench_kernels",        # Pallas kernel microbench (interpret mode)
-    "roofline",             # dry-run roofline summary (deliverable g)
+    "bench_step_fusion",      # device-resident interval engine vs per-step/seed
+    "bench_sharded_runtime",  # single-program sharded vs host-driven box runtime
+    "bench_cost_schemes",     # Fig 6a group 1 + Fig 3
+    "bench_policies",         # Fig 6a group 2 + Fig 4
+    "bench_box_size",         # Fig 6a group 3
+    "bench_interval",         # Fig 6a group 4
+    "bench_threshold",        # Fig 6a group 5
+    "bench_speedup",          # Fig 6b + Fig 5
+    "bench_strong_scaling",   # Fig 7
+    "bench_weak_scaling",     # Fig 8
+    "bench_moe_dlb",          # paper technique -> MoE expert parallelism
+    "bench_elastic",          # fault tolerance / checkpoint (runnability)
+    "bench_kernels",          # Pallas kernel microbench (interpret mode)
+    "roofline",               # dry-run roofline summary (deliverable g)
 ]
+
+
+def module_summaries() -> "list[tuple[str, str]]":
+    """(module, first docstring line) per benchmark module.
+
+    Parsed from source with ``ast`` — importing the modules would
+    initialize the jax backend (and fail the fast ``--help`` path on any
+    broken import, which ``--check-imports`` reports properly instead).
+    """
+    here = os.path.dirname(os.path.abspath(__file__))
+    out = []
+    for name in MODULES:
+        try:
+            with open(os.path.join(here, f"{name}.py")) as fh:
+                doc = ast.get_docstring(ast.parse(fh.read())) or ""
+            first = doc.strip().splitlines()[0].strip() if doc.strip() else "(no docstring)"
+        except OSError:
+            first = "(missing module)"
+        except SyntaxError:  # a broken module must not poison the sweep
+            first = "(unparsable)"
+        out.append((name, first))
+    return out
 
 
 def check_imports() -> int:
@@ -51,7 +79,14 @@ def check_imports() -> int:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    epilog = "benchmark modules:\n" + "\n".join(
+        f"  {name:24s} {summary}" for name, summary in module_summaries()
+    ) + "\n\nsee docs/benchmarks.md for what each measures and how to read it"
+    ap = argparse.ArgumentParser(
+        description="Run the benchmark sweep (one module per paper table/figure).",
+        epilog=epilog,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--only", default=None, help="run a single bench module")
     ap.add_argument("--out", default=None, help="also write the CSV to this file")
     ap.add_argument(

@@ -122,6 +122,9 @@ class LoadBalancer:
         return self.mapping
 
     def should_run(self, step: int) -> bool:
+        """True when the LB routine is due at ``step``: every ``interval``
+        steps, always after :meth:`force_rebalance`/:meth:`resize`, and at
+        most once ever when ``static``."""
         if self._force_next:
             return True
         if self.static and self._balanced_once:

@@ -57,6 +57,11 @@ class CostMeasure:
     hyperparameter_free: bool = False
 
     def measure(self, **observations) -> np.ndarray:  # pragma: no cover - interface
+        """Return non-negative per-box costs, shape ``(n_boxes,)``.
+
+        ``observations`` are strategy-specific keyword inputs (counts,
+        counters, ledger handles); unknown keys must be ignored so one
+        call site can serve every strategy."""
         raise NotImplementedError
 
 
@@ -112,6 +117,8 @@ class WorkCounterCost(CostMeasure):
     hyperparameter_free: bool = True
 
     def measure(self, *, work_counters: np.ndarray, **_) -> np.ndarray:
+        """Validate and forward per-box executed-work counters (optionally
+        scaled to seconds by ``per_unit_time``)."""
         counters = np.asarray(work_counters, dtype=np.float64)
         if np.any(counters < 0):
             raise ValueError("work counters must be non-negative")
@@ -155,10 +162,14 @@ class ActivityLedger:
 
     # -- callback registration (CUPTI: cuptiActivityRegisterCallbacks) ------
     def register_callback(self, fn: Callable[[List[ActivityRecord]], None]) -> None:
+        """Register a buffer-completed callback; each :meth:`flush` delivers
+        the staged records to every registered callback."""
         self._callbacks.append(fn)
 
     # -- record production ---------------------------------------------------
     def record(self, name: str, box: int, start: float, end: float) -> None:
+        """Stage one (kernel, box, start, end) activity record; the buffer
+        auto-flushes when ``buffer_records`` records have accumulated."""
         if end < start:
             raise ValueError("activity record with end < start")
         self._buffer.append(ActivityRecord(name, box, start, end))
@@ -183,6 +194,8 @@ class ActivityLedger:
 
     # -- buffer delivery (CUPTI: bufferCompleted callback) --------------------
     def flush(self) -> None:
+        """Deliver staged records to the registered callbacks (the CUPTI
+        ``bufferCompleted`` moment) and archive them for aggregation."""
         if not self._buffer:
             return
         batch, self._buffer = self._buffer, []
@@ -205,6 +218,7 @@ class ActivityLedger:
         return out
 
     def reset(self) -> None:
+        """Drop all staged and delivered records (start a fresh round)."""
         self._buffer.clear()
         self._delivered.clear()
 
@@ -219,6 +233,8 @@ class ActivityLedgerCost(CostMeasure):
     hyperparameter_free: bool = True
 
     def measure(self, *, n_boxes: int, **_) -> np.ndarray:
+        """Per-box summed kernel durations from the ledger (optionally
+        clearing it afterwards, so each round measures fresh records)."""
         costs = self.ledger.box_durations(n_boxes, kernel=self.kernel)
         if self.reset_after_measure:
             self.ledger.reset()
@@ -240,6 +256,8 @@ class EMASmoother:
         self._state: Optional[np.ndarray] = None
 
     def update(self, costs: np.ndarray) -> np.ndarray:
+        """Fold one round's costs into the EMA and return the smoothed
+        vector (a shape change resets the state — e.g. after regridding)."""
         costs = np.asarray(costs, dtype=np.float64)
         if self._state is None or self._state.shape != costs.shape:
             self._state = costs.copy()
@@ -248,4 +266,5 @@ class EMASmoother:
         return self._state.copy()
 
     def reset(self) -> None:
+        """Forget the smoothed state (next update starts fresh)."""
         self._state = None

@@ -128,7 +128,7 @@ def knapsack_partition(
         mapping[b] = dev
         heapq.heappush(heap, (load + costs[b] / caps[dev], owned + 1, dev))
 
-    _refine_swaps(costs, mapping, n_devices, caps, refine_sweeps)
+    _refine_swaps(costs, mapping, n_devices, caps, refine_sweeps, cap_boxes)
     return mapping
 
 
@@ -138,9 +138,17 @@ def _refine_swaps(
     n_devices: int,
     caps: np.ndarray,
     sweeps: int,
+    cap_boxes: Optional[int] = None,
 ) -> None:
     """AMReX-style efficiency refinement: move/swap boxes off the max-loaded
-    device whenever doing so lowers the maximum effective load. In-place."""
+    device whenever doing so lowers the maximum effective load. In-place.
+
+    Honours ``cap_boxes``: a single-box move is skipped when it would push
+    the destination past the boxes-per-device cap (swaps preserve counts,
+    so they are always legal).  With ``max_boxes_per_device=1.0`` this
+    makes the whole knapsack pipeline count-preserving — the invariant the
+    sharded runtime's equal-slot layout relies on.
+    """
     if len(costs) == 0 or n_devices == 1:
         return
     for _ in range(max(0, sweeps)):
@@ -148,9 +156,11 @@ def _refine_swaps(
         src = int(np.argmax(loads))
         improved = False
         src_boxes = np.where(mapping == src)[0]
-        # try single-box moves to the lightest device
+        # try single-box moves to the lightest device (cap permitting)
         dst = int(np.argmin(loads))
-        if dst != src:
+        if dst != src and (
+            cap_boxes is None or int(np.sum(mapping == dst)) < cap_boxes
+        ):
             for b in src_boxes[np.argsort(-costs[src_boxes])]:
                 new_src = loads[src] - costs[b] / caps[src]
                 new_dst = loads[dst] + costs[b] / caps[dst]

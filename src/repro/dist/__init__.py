@@ -1,31 +1,60 @@
 """Distributed runtime: real multi-device execution of the paper's loop.
 
-Layering (each module usable on its own):
+Layering (each module usable on its own; the full picture, including the
+data flow of one LB round, is in ``docs/architecture.md``):
 
   * ``box_runtime`` — ``BoxRuntime``: per-box field/particle state committed
     to real devices per the LoadBalancer mapping; halo + emigration
-    exchange between neighbour boxes; device-side work counters feed the
-    balancer; adoption moves box state between devices (``jax.device_put``).
+    exchange between neighbour boxes driven from the host (O(boxes)
+    dispatches per step — the validation runtime); adoption moves box
+    state between devices (``jax.device_put``).
+  * ``sharded_runtime`` — ``ShardedRuntime``: the same physics and halo
+    geometry as one XLA program per LB interval — ``shard_map`` over the
+    box mesh, ``ppermute``-ring halo/emigration collectives, one
+    device→host sync per interval (the production runtime).
+  * ``runtime_api`` — the contract both runtimes implement
+    (``DistributedPICRuntime``): one commit/adoption API
+    (``apply_mapping``), one capacity API (``update_capacities``), one
+    straggler loop (``StragglerLoop`` via ``attach_straggler_detector``).
+  * ``collectives`` — ``ring_all_gather`` (ppermute ring) + the
+    ``shard_map`` version shim.
   * ``elastic`` — ``ElasticRunner`` / ``DeviceSet``: device failure and
     scale-up mid-run; balancer resize with a one-shot gate bypass.
   * ``straggler`` — ``StragglerDetector``: EWMA work/time throughput ->
     capacity vector for the capacity-aware knapsack.
   * ``sharding`` — logical-axis -> mesh-axis rules (``default_rules`` /
-    ``spec_for`` / ``tree_shardings`` / ``batch_sharding``) shared by
-    ``repro.models`` / ``repro.train`` / ``repro.launch``.
+    ``runtime_rules`` / ``spec_for`` / ``tree_shardings`` /
+    ``batch_sharding`` / ``state_shardings``) shared by ``repro.models`` /
+    ``repro.train`` / ``repro.launch`` and the PIC runtimes.
 """
 from .box_runtime import BoxRuntime
+from .collectives import ring_all_gather
 from .elastic import DeviceSet, ElasticRunner
-from .sharding import batch_sharding, default_rules, spec_for, tree_shardings
+from .runtime_api import DistributedPICRuntime, StragglerLoop
+from .sharded_runtime import ShardedRuntime
+from .sharding import (
+    batch_sharding,
+    default_rules,
+    runtime_rules,
+    spec_for,
+    state_shardings,
+    tree_shardings,
+)
 from .straggler import StragglerDetector
 
 __all__ = [
     "BoxRuntime",
+    "ShardedRuntime",
+    "DistributedPICRuntime",
+    "StragglerLoop",
     "DeviceSet",
     "ElasticRunner",
     "StragglerDetector",
     "batch_sharding",
     "default_rules",
+    "ring_all_gather",
+    "runtime_rules",
     "spec_for",
+    "state_shardings",
     "tree_shardings",
 ]

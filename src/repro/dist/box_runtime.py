@@ -36,8 +36,15 @@ device** per the ``LoadBalancer``'s distribution mapping.  One step is:
 
 Capacity awareness: ``update_capacities`` forwards a straggler-detector
 capacity vector (``repro.dist.straggler``) into the knapsack and forces a
-rebalance, closing the loop Miller et al. (arXiv:2003.10406) motivate for
-heterogeneous workers.
+rebalance, and ``attach_straggler_detector`` closes the loop end-to-end
+(measured per-device interval work/time -> EWMA capacities -> knapsack;
+see ``repro.dist.runtime_api``), as Miller et al. (arXiv:2003.10406)
+motivate for heterogeneous workers.
+
+This runtime dispatches O(boxes) host operations per step (counted in
+``host_dispatches``) — fine for validation, not for production rates; the
+single-program counterpart is ``repro.dist.sharded_runtime`` (see
+``docs/architecture.md``).
 """
 from __future__ import annotations
 
@@ -55,6 +62,7 @@ from ..pic.fields import Fields, make_sponge
 from ..pic.grid import Grid2D
 from ..pic.particles import Particles
 from ..pic.problem import ProblemSetup
+from .runtime_api import _StragglerMixin
 
 __all__ = ["BoxRuntime"]
 
@@ -75,7 +83,7 @@ def _np_box_ids(z: np.ndarray, x: np.ndarray, grid: Grid2D) -> np.ndarray:
     return bz * grid.boxes_x + bx
 
 
-class BoxRuntime:
+class BoxRuntime(_StragglerMixin):
     """Step a ``ProblemSetup`` with per-box state placed on real devices.
 
     Parameters
@@ -131,6 +139,10 @@ class BoxRuntime:
         self._capacity_margin = capacity_margin
         self.t = 0.0
         self.step_idx = 0
+        #: host operations issued (device_put strips/commits + jit
+        #: dispatches) — O(boxes) per step; the number the sharded runtime
+        #: exists to flatten (see benchmarks/bench_sharded_runtime.py)
+        self.host_dispatches = 0
 
         self.balancer = LoadBalancer(
             n_devices=n_devices,
@@ -219,6 +231,7 @@ class BoxRuntime:
     # placement
     # ------------------------------------------------------------------
     def device_of(self, box: int):
+        """The jax device owning ``box`` under the current mapping."""
         return self.devices[int(self.balancer.mapping[box])]
 
     def _place(self, boxes) -> None:
@@ -235,6 +248,7 @@ class BoxRuntime:
                 self._static[b] = jax.device_put(jnp.asarray(self._static_host[b]), d)
             else:
                 self._static[b] = jax.device_put(self._static[b], d)
+            self.host_dispatches += 3
 
     def apply_mapping(self, new_mapping) -> None:
         """Adopt an externally-decided distribution mapping: update the
@@ -302,6 +316,7 @@ class BoxRuntime:
                 total[b] += n
         self.boxes = [tuple(sp) for sp in per_box]
         self._counts = total
+        self.host_dispatches += grid.n_boxes * len(pooled)  # one commit per buffer
 
     def _distribute_initial(self, species: Tuple[Particles, ...]) -> None:
         pooled = []
@@ -348,6 +363,7 @@ class BoxRuntime:
         d = self.device_of(box)
         pnz, pnx = self.local_grid.shape
         out = jax.device_put(jnp.zeros((channels, pnz, pnx), jnp.float32), d)
+        self.host_dispatches += 1 + len(plan)
         for src, (tz, tx), (sz, sx) in plan:
             strip = jax.device_put(sources[src][:, sz, sx], d)
             out = out.at[:, tz, tx].add(strip)
@@ -371,6 +387,7 @@ class BoxRuntime:
             stepped.append(sp)
             j_padded.append(j)
             work_dev.append(work)
+        self.host_dispatches += 2 * n_boxes  # particle + field jit per box
         # 3. current halo fold -> exact global J on each padded tile
         padded_j = [self._assemble(j_padded, self._fold[b], b, 3)
                     for b in range(n_boxes)]
@@ -386,6 +403,7 @@ class BoxRuntime:
         adopted = False
         if self.balancer.should_run(self.step_idx):
             costs = np.asarray(jax.device_get(work_dev), np.float64)
+            self._observe_straggler(costs)
             old = self.balancer.mapping.copy()
             new_mapping = self.balancer.step(
                 self.step_idx,
@@ -406,6 +424,7 @@ class BoxRuntime:
         }
 
     def run(self, n_steps: int) -> None:
+        """Advance ``n_steps`` steps (LB rounds run when due)."""
         for _ in range(n_steps):
             self.step()
 
@@ -423,6 +442,8 @@ class BoxRuntime:
     # observability
     # ------------------------------------------------------------------
     def total_alive(self) -> int:
+        """Alive particles across all boxes and species (host-side count
+        maintained by the emigration exchange)."""
         return int(self._counts.sum())
 
     def box_counts(self) -> np.ndarray:

@@ -1,0 +1,71 @@
+"""Device-level collectives for the single-program sharded runtime.
+
+``repro.dist.box_runtime`` moves halo strips with host-driven
+``jax.device_put`` calls — O(boxes) host dispatches per step, the exact
+host-bound pattern the paper warns against for the hot loop.  This module
+provides the in-program replacements used by
+``repro.dist.sharded_runtime``: everything here runs *inside* ``shard_map``
+(and inside ``lax.scan``), so the whole LB interval compiles to one XLA
+program and cross-device data motion is scheduled by the runtime, not by
+Python.
+
+The primitive is :func:`ring_all_gather`, built from explicit
+``jax.lax.ppermute`` hops around the 1-D device ring: hop ``j`` forwards
+the chunk received at hop ``j - 1`` to the ring successor, so after
+``n - 1`` hops every device holds every shard.  On a TPU torus each hop is
+a single-link neighbour transfer (the ICI-native pattern); on the CPU
+backend XLA lowers it to buffer copies.  The payload is each box's
+*interior* tile — the minimal global information — and the halo paste /
+current fold then reduce to local gathers through the dense index tables of
+``repro.pic.boxes``.
+
+Version compatibility mirrors ``repro.pic.sharded``: the ``jax.shard_map``
+and ``jax.lax.axis_size`` fallbacks define the repo's minimum supported jax
+(0.4.30), exercised by the CI fast lane's version matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.6 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map", "axis_size", "ring_all_gather"]
+
+
+def axis_size(axis_name: str) -> int:
+    """Size of a mapped mesh axis (compat shim across jax versions)."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:  # pragma: no cover - older jax
+        return jax.lax.psum(1, axis_name)
+
+
+def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather the leading axis of ``x`` across ``axis_name`` via a
+    ``ppermute`` ring.
+
+    ``x`` is each device's ``(chunk, ...)`` shard; returns
+    ``(axis_size * chunk, ...)`` in device order (device 0's shard first),
+    identical on every device.  Implemented as ``n - 1`` unrolled ppermute
+    hops, each forwarding the previously received chunk to the ring
+    successor — the standard ring all-gather, with the reassembly rotation
+    done by a local gather on ``axis_index``.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunks = [x]
+    cur = x
+    for _ in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        chunks.append(cur)
+    # chunk j arrived from the device j hops back around the ring
+    stacked = jnp.stack(chunks)  # (n, chunk, ...)
+    idx = jax.lax.axis_index(axis_name)
+    ordered = stacked[(idx - jnp.arange(n)) % n]
+    return ordered.reshape((n * x.shape[0],) + x.shape[1:])

@@ -1,0 +1,165 @@
+"""The contract both distributed PIC runtimes implement.
+
+``repro.dist`` has two executions of the same paper loop —
+``BoxRuntime`` (host-driven, one dispatch per box per step; the validation
+runtime) and ``ShardedRuntime`` (single-program, collectives; the
+production runtime).  They share:
+
+  * one **commit/adoption API** — ``apply_mapping`` adopts an
+    externally-decided distribution mapping and re-commits state to the
+    devices it names; the balancer-driven adoption path goes through the
+    same code;
+  * one **capacity API** — ``update_capacities`` forwards a per-device
+    capacity vector into the knapsack;
+  * one **straggler loop** — :class:`StragglerLoop` below, fed once per LB
+    interval with the measured per-device (work, time) observations.
+
+``DistributedPICRuntime`` is a :class:`typing.Protocol`, not a base class:
+the runtimes stay independent (they have genuinely different state
+layouts), and ``tests/test_sharded_runtime.py`` asserts conformance so the
+surface cannot drift apart.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from ..core import LoadBalancer
+from .straggler import StragglerDetector
+
+__all__ = ["DistributedPICRuntime", "StragglerLoop", "device_work"]
+
+
+@runtime_checkable
+class DistributedPICRuntime(Protocol):
+    """Common surface of ``BoxRuntime`` and ``ShardedRuntime``."""
+
+    balancer: LoadBalancer
+
+    def step(self) -> dict:
+        """Advance one PIC step (running the LB routine when due)."""
+        ...
+
+    def run(self, n_steps: int) -> None:
+        """Advance ``n_steps`` steps."""
+        ...
+
+    def apply_mapping(self, new_mapping) -> None:
+        """Adopt an externally-decided distribution mapping and re-commit
+        the affected box state to the devices it names."""
+        ...
+
+    def update_capacities(self, capacities) -> None:
+        """Feed a per-device capacity vector into the knapsack and force
+        the next LB round to rebalance against it."""
+        ...
+
+    def attach_straggler_detector(
+        self, detector: StragglerDetector, time_fn=None
+    ) -> None:
+        """Close the straggler loop: per-interval (work, time) observations
+        feed ``detector`` and its capacity vector feeds the balancer."""
+        ...
+
+    def total_alive(self) -> int:
+        """Alive particles across all boxes and species."""
+        ...
+
+    def box_counts(self) -> np.ndarray:
+        """Alive particles per box, shape ``(n_boxes,)``."""
+        ...
+
+    def devices_in_use(self) -> List[int]:
+        """Distinct device ids currently holding box state."""
+        ...
+
+
+def device_work(work_per_box: np.ndarray, mapping: np.ndarray, n_devices: int) -> np.ndarray:
+    """Sum per-box executed-work counters onto their owner devices."""
+    out = np.zeros(n_devices, np.float64)
+    np.add.at(out, np.asarray(mapping), np.asarray(work_per_box, np.float64))
+    return out
+
+
+class StragglerLoop:
+    """Wires a :class:`StragglerDetector` into a :class:`LoadBalancer`.
+
+    Once per LB interval the owning runtime calls :meth:`observe` with the
+    per-device executed work (from the in-situ counters it already fetched
+    for the balancer) and the per-device interval times.  The detector's
+    EWMA capacity vector is pushed into the balancer every observation; the
+    improvement-threshold gate is bypassed (``force_rebalance``) only when
+    the *straggler set* changes, so a steady capacity estimate does not
+    force churn every round.
+
+    Time source: the runtimes default to charging the bulk-synchronous wall
+    interval to every device (``times = elapsed * ones``).  On a
+    homogeneous simulator that degenerates to work-share and is harmless
+    once balanced; on real heterogeneous hardware, pass ``time_fn`` to
+    ``attach_straggler_detector`` to supply per-device busy times from
+    device telemetry (tests inject synthetic slow devices this way).
+    """
+
+    def __init__(self, detector: StragglerDetector, balancer: LoadBalancer):
+        if detector.n_devices != balancer.n_devices:
+            raise ValueError(
+                f"detector tracks {detector.n_devices} devices but the "
+                f"balancer has {balancer.n_devices}"
+            )
+        self.detector = detector
+        self.balancer = balancer
+        self._last_stragglers: frozenset = frozenset()
+
+    def observe(
+        self, work_per_device: np.ndarray, times_per_device: np.ndarray
+    ) -> np.ndarray:
+        """Fold one interval's observations; returns the capacity vector."""
+        caps = self.detector.update(work_per_device, times_per_device)
+        self.balancer.set_capacities(caps)
+        stragglers = frozenset(self.detector.stragglers())
+        if stragglers != self._last_stragglers:
+            self.balancer.force_rebalance()
+        self._last_stragglers = stragglers
+        return caps
+
+
+class _StragglerMixin:
+    """Shared ``attach_straggler_detector`` implementation for the runtimes.
+
+    The runtime calls ``_observe_straggler(work_per_box)`` at each LB
+    round, *before* offering costs to the balancer, so a freshly-updated
+    capacity vector shapes the same round's proposal.
+    """
+
+    _straggler_loop: Optional[StragglerLoop] = None
+    _straggler_time_fn: Optional[Callable] = None
+    _straggler_t0: float = 0.0
+
+    def attach_straggler_detector(
+        self,
+        detector: StragglerDetector,
+        time_fn: Optional[Callable[["_StragglerMixin", float], np.ndarray]] = None,
+    ) -> None:
+        """Enable the straggler loop.  ``time_fn(runtime, elapsed)`` may
+        return per-device interval times (seconds); by default the wall
+        time since the previous LB round is charged to every device."""
+        self._straggler_loop = StragglerLoop(detector, self.balancer)
+        self._straggler_time_fn = time_fn
+        self._straggler_t0 = time.perf_counter()
+
+    def _observe_straggler(self, work_per_box: np.ndarray) -> None:
+        if self._straggler_loop is None:
+            return
+        now = time.perf_counter()
+        elapsed = max(now - self._straggler_t0, 1e-9)
+        self._straggler_t0 = now
+        n = self.balancer.n_devices
+        if self._straggler_time_fn is not None:
+            times = np.asarray(self._straggler_time_fn(self, elapsed), np.float64)
+        else:
+            times = np.full(n, elapsed)
+        self._straggler_loop.observe(
+            device_work(work_per_box, self.balancer.mapping, n), times
+        )

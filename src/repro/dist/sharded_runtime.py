@@ -1,0 +1,650 @@
+"""Single-program sharded stepping: the whole LB interval as one XLA program.
+
+``BoxRuntime`` validates the paper's loop but drives it from the host — a
+``device_put`` per halo strip and a jit dispatch per box per step, O(boxes)
+host operations in the hot path.  ``ShardedRuntime`` is the production
+counterpart: the same physics (the composable ``particle_phase`` /
+``field_phase`` from ``repro.pic.engine``), the same halo geometry (the
+dense index tables of ``repro.pic.boxes``, derived from the slice plans),
+but executed *inside* ``shard_map`` over the 1-D box mesh
+(``repro.launch.mesh.make_box_mesh``) with the whole LB interval fused into
+one ``lax.scan`` — so the host dispatches exactly one program per interval
+and syncs exactly once, to fetch the interval's device-side work-counter
+history for the balancer.
+
+State layout — *slot-major*: every per-box array is stacked along a leading
+axis of ``n_boxes`` slots, block-sharded over the mesh
+(``repro.dist.sharding.state_shardings``), and device ``d`` owns the
+contiguous slots ``[d*bpd, (d+1)*bpd)``.  Which *box* lives in which slot
+is the distribution mapping: ``slot_box[s]`` names it, and because the
+equal-count knapsack (``max_boxes_per_device=1.0``, cap honoured through
+refinement) keeps every device at exactly ``bpd`` boxes, any adopted
+mapping is realizable as a pure slot permutation.
+
+One step inside the program:
+
+  1. *Halo paste* — interiors travel the ring (``ring_all_gather``, built
+     from ``jax.lax.ppermute`` hops), are scattered to the global frame
+     through ``interior_cell_map``, and each slot gathers its halo-padded
+     tile through ``padded_cell_map`` — the collective replacement for
+     ``halo_paste_plan``'s host strip copies.
+  2. *Particle phase* — ``particle_phase_stacked``: all owned slots
+     advance in one vmapped call, emitting per-slot deposits, alive counts
+     and the in-situ executed-work counters.
+  3. *Current fold* — padded deposits travel the ring and scatter-**add**
+     onto the global frame through the same ``padded_cell_map`` (the
+     collective ``halo_fold_plan``); each slot re-gathers its exact global
+     J tile.
+  4. *Field phase* — ``field_phase_stacked`` advances every padded tile
+     (sponge + per-box laser profile) and keeps interiors.
+  5. *Emigration* — a capacity-bounded all-to-all: each slot compacts its
+     leavers into a fixed ``(mig_cap,)`` pack tagged with destination box
+     ids, the packs travel the ring, and every slot merges the arrivals
+     addressed to its box with its stayers (overflow is counted, never
+     silently lost).
+
+On LB adoption the runtime *re-commits the sharding*: the new mapping
+becomes a slot permutation applied on device (one gather program with
+``out_shardings``; no device→host transfer) so the next interval runs with
+the new placement.  Capacity awareness and the straggler loop ride the
+shared ``repro.dist.runtime_api`` surface, same as ``BoxRuntime``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core import LoadBalancer
+from ..launch.mesh import BOX_AXIS, make_box_mesh
+from ..pic.boxes import BoxDecomposition, interior_cell_map, padded_cell_map
+from ..pic.deposition import box_work_counters
+from ..pic.engine import field_phase_stacked, particle_phase_stacked
+from ..pic.fields import Fields, make_sponge
+from ..pic.grid import Grid2D
+from ..pic.particles import Particles, kinetic_energy
+from ..pic.problem import ProblemSetup
+from ..pic.stepper import Simulation
+from .box_runtime import _MIN_HALO, _np_box_ids, _round_up
+from .collectives import ring_all_gather, shard_map
+from .runtime_api import _StragglerMixin
+from .sharding import state_shardings
+
+__all__ = ["ShardedRuntime"]
+
+#: particle-buffer float fields travelling through the emigration all-to-all
+_PKEYS = ("z", "x", "ux", "uy", "uz", "w")
+
+#: vmap axes for slot-stacked Particles (scalar charge/mass not batched)
+_P_AXES = Particles(z=0, x=0, ux=0, uy=0, uz=0, w=0, alive=0, q=None, m=None)
+
+
+class ShardedRuntime(_StragglerMixin):
+    """Step a ``ProblemSetup`` as one sharded XLA program per LB interval.
+
+    Parameters
+    ----------
+    problem:      grid + species + laser (``repro.pic.problem``).  The box
+                  count must be divisible by ``n_devices`` (slots are
+                  equal-count by construction).
+    n_devices:    devices forming the box mesh (fake host devices via
+                  ``REPRO_HOST_DEVICES`` / ``XLA_FLAGS`` on CPU).
+    lb_interval:  steps per LB round (paper: 10) — also the scan length of
+                  one fused program.
+    halo:         guard depth of the per-slot tiles (>= 4, as
+                  ``BoxRuntime``).
+    mig_cap:      per-slot, per-species emigrant capacity of the in-program
+                  all-to-all (default ``max(16, cap // 8)``); overflow is
+                  counted in ``dropped_total`` rather than silently lost.
+    policy / improvement_threshold / shape_order / sponge_width /
+    capacity_margin / capacity_round / devices: as ``BoxRuntime``.  The
+                  knapsack runs with ``max_boxes_per_device=1.0`` (equal
+                  counts); proposals from non-count-preserving policies are
+                  repaired before adoption.
+    """
+
+    def __init__(
+        self,
+        problem: ProblemSetup,
+        n_devices: int,
+        lb_interval: int = 10,
+        *,
+        halo: int = _MIN_HALO,
+        policy: str = "knapsack",
+        improvement_threshold: float = 0.10,
+        shape_order: int = 3,
+        sponge_width: int = 8,
+        capacity_margin: float = 2.0,
+        capacity_round: int = 64,
+        mig_cap: Optional[int] = None,
+        devices: Optional[Sequence] = None,
+    ):
+        grid = problem.grid
+        if halo < _MIN_HALO:
+            raise ValueError(f"halo must be >= {_MIN_HALO} (particle stencil support)")
+        if min(grid.box_nz, grid.box_nx) < halo:
+            raise ValueError(
+                f"boxes ({grid.box_nz}x{grid.box_nx}) must be at least halo={halo} wide"
+            )
+        if grid.n_boxes % n_devices:
+            raise ValueError(
+                f"{grid.n_boxes} boxes do not split evenly over {n_devices} "
+                "devices; the sharded runtime needs equal-count slots"
+            )
+        self.grid = grid
+        self.laser = problem.laser
+        self.decomp = BoxDecomposition(grid)
+        self.halo = halo
+        self.shape_order = shape_order
+        self.n_devices = n_devices
+        self.lb_interval = lb_interval
+        self.t = 0.0
+        self.step_idx = 0
+        #: host dispatches (programs launched + host->device commits)
+        self.host_dispatches = 0
+        #: device->host syncs (exactly one per interval piece)
+        self.host_syncs = 0
+        #: emigrants lost to the capacity bound (should stay 0; see mig_cap)
+        self.dropped_total = 0
+
+        self.mesh = make_box_mesh(n_devices, devices=devices)
+        self.devices = list(np.ravel(self.mesh.devices))
+        self._bpd = grid.n_boxes // n_devices
+
+        self.balancer = LoadBalancer(
+            n_devices=n_devices,
+            policy=policy,
+            interval=lb_interval,
+            improvement_threshold=improvement_threshold,
+            max_boxes_per_device=1.0,  # equal counts: mappings stay slot-permutable
+        )
+        self.balancer.ensure_mapping(grid.n_boxes)
+
+        # -- geometry tables (shared with BoxRuntime via the slice plans) --
+        pnz, pnx = grid.box_nz + 2 * halo, grid.box_nx + 2 * halo
+        self.local_grid = Grid2D(
+            nz=pnz, nx=pnx, dz=grid.dz, dx=grid.dx, box_nz=pnz, box_nx=pnx, cfl=grid.cfl
+        )
+        self._cell_map = padded_cell_map(grid, halo)  # (n_boxes, pn, pn)
+        self._int_map = interior_cell_map(grid)  # (n_boxes, bnz, bnx)
+        self._origins = np.stack(
+            [
+                [(bz * grid.box_nz - halo) * grid.dz, (bx * grid.box_nx - halo) * grid.dx]
+                for bz, bx in grid.box_coords
+            ]
+        ).astype(np.float32)
+        self._centers = np.stack(
+            [
+                [(bz + 0.5) * grid.box_nz * grid.dz, (bx + 0.5) * grid.box_nx * grid.dx]
+                for bz, bx in grid.box_coords
+            ]
+        ).astype(np.float32)
+
+        sponge_g = np.pad(np.asarray(make_sponge(grid, sponge_width)), halo, mode="wrap")
+        if self.laser is not None:
+            prof_g = np.pad(np.asarray(self.laser.profile(grid)), halo, mode="wrap")
+        else:
+            prof_g = np.zeros_like(sponge_g)
+        statics = []
+        for bz, bx in grid.box_coords:
+            sz = slice(bz * grid.box_nz, bz * grid.box_nz + pnz)
+            sx = slice(bx * grid.box_nx, bx * grid.box_nx + pnx)
+            statics.append(np.stack([sponge_g[sz, sx], prof_g[sz, sx]]))
+        self._statics = np.stack(statics).astype(np.float32)  # (n_boxes, 2, pn, pn)
+
+        # -- initial slot assignment + state commit -----------------------
+        self._qm = [(float(p.q), float(p.m)) for p in problem.species]
+        self._slot_box = self._slots_from_mapping(self.balancer.mapping)
+        self._caps: List[int] = []
+        self._mig_caps: List[int] = []
+        tiles, species = self._pack_initial(
+            problem.species, capacity_margin, capacity_round, mig_cap
+        )
+        self._commit_state(tiles, species)
+        self._interval_cache: Dict[int, Callable] = {}
+        self._reorder_fn = None
+
+        self.history: Dict[str, List] = {
+            "field_energy": [],
+            "kinetic_energy": [],
+            "lb_steps": [],
+        }
+
+    # ------------------------------------------------------------------
+    # placement: slots <-> boxes <-> devices
+    # ------------------------------------------------------------------
+    def _slots_from_mapping(self, mapping: np.ndarray) -> np.ndarray:
+        """Initial slot_box: device ``d``'s slots hold its boxes in id order."""
+        slot_box = np.empty(self.grid.n_boxes, np.int64)
+        for d in range(self.n_devices):
+            boxes = np.where(np.asarray(mapping) == d)[0]
+            if len(boxes) != self._bpd:
+                raise ValueError("mapping must give every device the same box count")
+            slot_box[d * self._bpd : (d + 1) * self._bpd] = boxes
+        return slot_box
+
+    def device_of(self, box: int):
+        """The jax device owning ``box`` under the current mapping."""
+        return self.devices[int(self.balancer.mapping[box])]
+
+    def devices_in_use(self) -> List[int]:
+        """Distinct device ids currently holding box state."""
+        return sorted({self.device_of(b).id for b in range(self.grid.n_boxes)})
+
+    def _commit_state(self, tiles: np.ndarray, species) -> None:
+        """Commit slot-major host state to the mesh (initial placement) —
+        shardings come from the shared rule table
+        (``repro.dist.sharding.state_shardings``)."""
+        state = (
+            jnp.asarray(tiles),
+            tuple({k: jnp.asarray(v) for k, v in sp.items()} for sp in species),
+            jnp.asarray(self._slot_box.astype(np.int32)),
+        )
+        self._tiles, self._species, self._slot_box_dev = jax.device_put(
+            state, state_shardings(state, self.mesh)
+        )
+        self.host_dispatches += 1
+
+    # ------------------------------------------------------------------
+    # initial particle packing (slot-major, fixed capacity)
+    # ------------------------------------------------------------------
+    def _pack_initial(self, species, margin, quantum, mig_cap):
+        grid, S = self.grid, self.grid.n_boxes
+        box_of_slot = self._slot_box
+        slot_of_box = np.empty(S, np.int64)
+        slot_of_box[box_of_slot] = np.arange(S)
+        self._alive_by_box = np.zeros(S, np.float64)
+        packed = []
+        for tpl in species:
+            host = jax.device_get((tpl.z, tpl.x, tpl.ux, tpl.uy, tpl.uz, tpl.w, tpl.alive))
+            z, x, ux, uy, uz, w, alive = (np.asarray(a) for a in host)
+            keep = alive
+            pool = {
+                "z": z[keep], "x": x[keep], "ux": ux[keep],
+                "uy": uy[keep], "uz": uz[keep], "w": w[keep],
+            }
+            ids = _np_box_ids(pool["z"], pool["x"], grid)
+            order = np.argsort(ids, kind="stable")
+            bounds = np.searchsorted(ids[order], np.arange(S + 1))
+            counts = np.diff(bounds)
+            cap = _round_up(int(counts.max() * margin) if len(ids) else 0, quantum)
+            self._caps.append(cap)
+            self._mig_caps.append(
+                int(mig_cap) if mig_cap is not None else max(16, cap // 8)
+            )
+            buf = {
+                "z": np.empty((S, cap), np.float32),
+                "x": np.empty((S, cap), np.float32),
+                "ux": np.zeros((S, cap), np.float32),
+                "uy": np.zeros((S, cap), np.float32),
+                "uz": np.zeros((S, cap), np.float32),
+                "w": np.zeros((S, cap), np.float32),
+                "alive": np.zeros((S, cap), bool),
+            }
+            # park dead padding at each slot's box centre (indices stay valid)
+            buf["z"][:] = self._centers[box_of_slot, 0][:, None]
+            buf["x"][:] = self._centers[box_of_slot, 1][:, None]
+            for b in range(S):
+                sel = order[bounds[b] : bounds[b + 1]]
+                s, n = slot_of_box[b], len(sel)
+                for k in _PKEYS:
+                    buf[k][s, :n] = pool[k][sel]
+                buf["alive"][s, :n] = True
+                self._alive_by_box[b] += n
+            packed.append(buf)
+        tiles = np.zeros((S, 6, grid.box_nz, grid.box_nx), np.float32)
+        return tiles, packed
+
+    # ------------------------------------------------------------------
+    # the fused interval program
+    # ------------------------------------------------------------------
+    def _interval_fn(self, n_steps: int) -> Callable:
+        if n_steps in self._interval_cache:
+            return self._interval_cache[n_steps]
+
+        grid, local_grid, halo = self.grid, self.local_grid, self.halo
+        order, laser, dt = self.shape_order, self.laser, grid.dt
+        caps, mig_caps, qm = list(self._caps), list(self._mig_caps), list(self._qm)
+        CELL_MAP = jnp.asarray(self._cell_map)
+        INT_MAP = jnp.asarray(self._int_map)
+        STATICS = jnp.asarray(self._statics)
+        ORIGINS = jnp.asarray(self._origins)
+        CENTERS = jnp.asarray(self._centers)
+        dv = np.float32(0.5 * grid.dz * grid.dx)
+
+        def to_particles(d: Dict[str, jax.Array], s: int) -> Particles:
+            q, m = qm[s]
+            return Particles(
+                z=d["z"], x=d["x"], ux=d["ux"], uy=d["uy"], uz=d["uz"],
+                w=d["w"], alive=d["alive"],
+                q=jnp.float32(q), m=jnp.float32(m),
+            )
+
+        def exchange(p: Particles, s: int, my_box, my_center):
+            """Capacity-bounded emigration all-to-all for one species."""
+            cap, mcap = caps[s], mig_caps[s]
+            new_box = grid.box_of_position(p.z, p.x)  # (bpd, cap) int32
+            stay = p.alive & (new_box == my_box[:, None])
+            emig = p.alive & ~stay
+            # compact leavers into the (mig_cap,) pack, destination-tagged
+            eidx = jnp.argsort(jnp.where(emig, 0, 1), axis=1)[:, :mcap]
+            ev = jnp.take_along_axis(emig, eidx, axis=1)
+            edest = jnp.where(ev, jnp.take_along_axis(new_box, eidx, axis=1), -1)
+            epack = {
+                k: jnp.take_along_axis(getattr(p, k), eidx, axis=1) for k in _PKEYS
+            }
+            dropped_e = emig.sum(axis=1) - ev.sum(axis=1)
+            # the packs travel the ring (one stacked payload per species);
+            # every slot sees every leaver
+            gdest = ring_all_gather(edest, BOX_AXIS).reshape(-1)  # (S*mcap,)
+            gstack = ring_all_gather(
+                jnp.stack([epack[k] for k in _PKEYS], axis=-1), BOX_AXIS
+            ).reshape(-1, len(_PKEYS))
+            gpack = {k: gstack[:, ki] for ki, k in enumerate(_PKEYS)}
+
+            def merge(stay_r, fields_r, box_r, center_r):
+                valid = jnp.concatenate([stay_r, gdest == box_r])
+                kidx = jnp.argsort(jnp.where(valid, 0, 1))[:cap]
+                new_alive = valid[kidx]
+                out = {
+                    k: jnp.concatenate([fields_r[k], gpack[k]])[kidx] for k in _PKEYS
+                }
+                # park dead entries at the box centre, zero their payload
+                out["z"] = jnp.where(new_alive, out["z"], center_r[0])
+                out["x"] = jnp.where(new_alive, out["x"], center_r[1])
+                for k in ("ux", "uy", "uz", "w"):
+                    out[k] = jnp.where(new_alive, out[k], 0.0)
+                out["alive"] = new_alive
+                dropped_c = valid.sum() - new_alive.sum()
+                return out, dropped_c
+
+            fields_rows = {k: getattr(p, k) for k in _PKEYS}
+            out, dropped_c = jax.vmap(merge)(stay, fields_rows, my_box, my_center)
+            return out, out["alive"].sum(axis=1), dropped_e + dropped_c
+
+        def local_interval(tiles, species, slot_box, t0):
+            # local shapes: tiles (bpd, 6, bnz, bnx); species leaves
+            # (bpd, cap); slot_box (bpd,) — the device's slice of the mapping
+            sb_all = ring_all_gather(slot_box, BOX_AXIS)  # (S,)
+            my_origin = ORIGINS[slot_box]
+            my_static = STATICS[slot_box]
+            my_cmap = CELL_MAP[slot_box]  # (bpd, pn, pn)
+            my_center = CENTERS[slot_box]
+            cmap_all = CELL_MAP[sb_all]  # (S, pn, pn)
+            imap_all = INT_MAP[sb_all]  # (S, bnz, bnx)
+            my_box = slot_box
+
+            def step(carry, i):
+                tiles, species = carry
+                t = t0 + i * dt
+                # 1. halo paste: interiors around the ring -> padded tiles
+                ints_all = ring_all_gather(tiles, BOX_AXIS)  # (S, 6, bnz, bnx)
+                gF = (
+                    jnp.zeros((6, grid.n_cells), jnp.float32)
+                    .at[:, imap_all.reshape(-1)]
+                    .set(
+                        ints_all.transpose(1, 0, 2, 3).reshape(6, -1),
+                        unique_indices=True,
+                    )
+                )
+                padded = jnp.moveaxis(gF[:, my_cmap], 1, 0)  # (bpd, 6, pn, pn)
+                # 2. particle phase on all owned slots at once
+                sp_in = tuple(to_particles(d, s) for s, d in enumerate(species))
+                sp2, j3, counts = particle_phase_stacked(
+                    padded, sp_in, my_origin, local_grid,
+                    domain_grid=grid, shape_order=order,
+                )
+                work = box_work_counters(counts, grid)
+                # 3. current fold: padded deposits scatter-add to the global
+                #    frame, each slot re-gathers its exact global J tile
+                j_all = ring_all_gather(j3, BOX_AXIS)  # (S, 3, pn, pn)
+                gJ = (
+                    jnp.zeros((3, grid.n_cells), jnp.float32)
+                    .at[:, cmap_all.reshape(-1)]
+                    .add(j_all.transpose(1, 0, 2, 3).reshape(3, -1))
+                )
+                jp = jnp.moveaxis(gJ[:, my_cmap], 1, 0)  # (bpd, 3, pn, pn)
+                # 4. field phase, keep interiors
+                tiles2 = field_phase_stacked(
+                    padded, jp, my_static, t, local_grid, halo, laser=laser
+                )
+                # 5. emigration all-to-all
+                new_species, alive, dropped = [], 0, 0
+                ke = 0.0
+                for s, p in enumerate(sp2):
+                    out, alive_s, dropped_s = exchange(p, s, my_box, my_center)
+                    new_species.append(out)
+                    alive = alive + alive_s
+                    dropped = dropped + dropped_s
+                    ke = ke + jax.vmap(kinetic_energy, in_axes=(_P_AXES,))(
+                        to_particles(out, s)
+                    )
+                fe = dv * jnp.sum(tiles2.astype(jnp.float32) ** 2, axis=(1, 2, 3))
+                outs = {
+                    "counts": counts,
+                    "work": work,
+                    "alive": alive.astype(jnp.int32),
+                    "dropped": dropped.astype(jnp.int32),
+                    "field_energy": fe,
+                    "kinetic_energy": ke,
+                }
+                return (tiles2, tuple(new_species)), outs
+
+            (tiles, species), ys = jax.lax.scan(
+                step, (tiles, species), jnp.arange(n_steps, dtype=jnp.float32)
+            )
+            return tiles, species, ys
+
+        sp_tiles = P(BOX_AXIS, None, None, None)
+        sp_part = P(BOX_AXIS, None)
+        specs_species = tuple(
+            {k: sp_part for k in ("alive",) + _PKEYS} for _ in self._species
+        )
+        sp_hist = P(None, BOX_AXIS)
+        specs_ys = {
+            k: sp_hist
+            for k in ("counts", "work", "alive", "dropped", "field_energy", "kinetic_energy")
+        }
+        fn = jax.jit(
+            shard_map(
+                local_interval,
+                mesh=self.mesh,
+                in_specs=(sp_tiles, specs_species, P(BOX_AXIS), P()),
+                out_specs=(sp_tiles, specs_species, specs_ys),
+            ),
+            donate_argnums=(0, 1),
+        )
+        self._interval_cache[n_steps] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # host driver: one dispatch + one sync per interval piece
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int) -> None:
+        """Advance ``n_steps`` steps, one fused program per LB round (chunk
+        boundaries stay aligned to ``lb_interval`` multiples, as the
+        single-host fused driver does)."""
+        interval = max(1, self.lb_interval)
+        remaining = n_steps
+        while remaining > 0:
+            chunk = min(remaining, interval - (self.step_idx % interval))
+            for piece in Simulation._chunk_pieces(chunk, interval):
+                self._run_piece(piece)
+            remaining -= chunk
+
+    def step(self) -> Dict[str, float]:
+        """Advance a single step (one-step program; prefer :meth:`run`)."""
+        self._run_piece(1)
+        return {
+            "step": self.step_idx,
+            "alive": float(self._alive_by_box.sum()),
+            "adopted": bool(
+                self.history["lb_steps"] and self.history["lb_steps"][-1] == self.step_idx - 1
+            ),
+        }
+
+    def _run_piece(self, n_steps: int) -> None:
+        lb_due = self.balancer.should_run(self.step_idx)
+        fn = self._interval_fn(n_steps)
+        self._tiles, self._species, ys = fn(
+            self._tiles, self._species, self._slot_box_dev, jnp.float32(self.t)
+        )
+        self.host_dispatches += 1
+        host = jax.device_get(ys)  # the interval's ONLY device->host sync
+        self.host_syncs += 1
+
+        sb = self._slot_box  # (S,) box id per slot; columns are slot-ordered
+        n_boxes = self.grid.n_boxes
+        work_box = np.empty((n_steps, n_boxes))
+        work_box[:, sb] = np.asarray(host["work"], np.float64)
+        counts_box = np.empty((n_steps, n_boxes))
+        counts_box[:, sb] = np.asarray(host["counts"], np.float64)
+        alive_box = np.empty((n_steps, n_boxes))
+        alive_box[:, sb] = np.asarray(host["alive"], np.float64)
+        self._alive_by_box = alive_box[-1]
+        self.dropped_total += int(np.asarray(host["dropped"]).sum())
+        self.history["field_energy"].extend(
+            float(v) for v in np.asarray(host["field_energy"]).sum(axis=1)
+        )
+        self.history["kinetic_energy"].extend(
+            float(v) for v in np.asarray(host["kinetic_energy"]).sum(axis=1)
+        )
+
+        if lb_due:
+            # row 0 is the round-boundary step — what per-step execution
+            # would have fed the balancer
+            self._observe_straggler(work_box[0])
+            old = self.balancer.mapping.copy()
+            new_mapping = self.balancer.step(
+                self.step_idx,
+                work_box[0],
+                box_coords=self.decomp.coords,
+                box_bytes=self.decomp.box_bytes(counts_box[0]),
+            )
+            if new_mapping is not None:
+                new_mapping = self._equalize(new_mapping, work_box[0])
+                self.balancer.mapping = new_mapping
+                self.history["lb_steps"].append(self.step_idx)
+                self._recommit(new_mapping)
+
+        self.step_idx += n_steps
+        self.t += n_steps * self.grid.dt
+
+    # ------------------------------------------------------------------
+    # adoption: re-commit the sharding as a slot permutation
+    # ------------------------------------------------------------------
+    def _equalize(self, mapping: np.ndarray, costs: np.ndarray) -> np.ndarray:
+        """Repair a mapping to exactly ``bpd`` boxes per device (no-op for
+        the equal-count knapsack; needed for e.g. the sfc policy whose
+        contiguous segments may be uneven)."""
+        m = np.asarray(mapping, np.int64).copy()
+        counts = np.bincount(m, minlength=self.n_devices)
+        while counts.max() > self._bpd:
+            src = int(np.argmax(counts))
+            boxes = np.where(m == src)[0]
+            b = boxes[np.argmin(costs[boxes])]  # cheapest box moves
+            under = np.where(counts < self._bpd)[0]
+            loads = np.array([costs[m == d].sum() for d in under])
+            dst = int(under[np.argmin(loads)])
+            m[b] = dst
+            counts[src] -= 1
+            counts[dst] += 1
+        return m
+
+    def apply_mapping(self, new_mapping) -> None:
+        """Adopt an externally-decided distribution mapping (the shared
+        commit/adoption API): update the balancer and re-commit the
+        sharding.  The mapping must give every device exactly ``bpd``
+        boxes (use the equal-count knapsack, or repair first)."""
+        new = np.asarray(new_mapping, dtype=np.int64)
+        if new.shape != (self.grid.n_boxes,) or new.min() < 0 or new.max() >= self.n_devices:
+            raise ValueError("mapping must assign every box to a valid device slot")
+        if np.any(np.bincount(new, minlength=self.n_devices) != self._bpd):
+            raise ValueError(
+                "sharded runtime mappings must give every device exactly "
+                f"{self._bpd} boxes"
+            )
+        self.balancer.mapping = new
+        self._recommit(new)
+
+    def _recommit(self, new_mapping: np.ndarray) -> None:
+        """Realize an adopted mapping as a slot permutation, applied on
+        device (one gather program, no device->host transfer)."""
+        S, bpd = self.grid.n_boxes, self._bpd
+        old_slot_of_box = np.empty(S, np.int64)
+        old_slot_of_box[self._slot_box] = np.arange(S)
+        new_slot_box = -np.ones(S, np.int64)
+        for d in range(self.n_devices):
+            slots = np.arange(d * bpd, (d + 1) * bpd)
+            # boxes staying on d keep their slots (they do not move at all)
+            stay = [s for s in slots if new_mapping[self._slot_box[s]] == d]
+            for s in stay:
+                new_slot_box[s] = self._slot_box[s]
+            incoming = [
+                b
+                for b in np.where(new_mapping == d)[0]
+                if new_slot_box[old_slot_of_box[b]] != b
+            ]
+            free = [s for s in slots if new_slot_box[s] < 0]
+            for s, b in zip(free, incoming):
+                new_slot_box[s] = b
+        assert (new_slot_box >= 0).all() and len(set(new_slot_box)) == S
+        perm = old_slot_of_box[new_slot_box]
+
+        if self._reorder_fn is None:
+            shardings = state_shardings((self._tiles, self._species), self.mesh)
+            self._reorder_fn = jax.jit(
+                lambda tiles, species, p: jax.tree_util.tree_map(
+                    lambda a: a[p], (tiles, species)
+                ),
+                out_shardings=shardings,
+            )
+        self._tiles, self._species = self._reorder_fn(
+            self._tiles, self._species, jnp.asarray(perm)
+        )
+        self._slot_box = new_slot_box
+        slot_dev = jnp.asarray(new_slot_box.astype(np.int32))
+        self._slot_box_dev = jax.device_put(
+            slot_dev, state_shardings(slot_dev, self.mesh)
+        )
+        self.host_dispatches += 2  # the reorder program + the mapping commit
+
+    # ------------------------------------------------------------------
+    # capacity awareness (straggler mitigation hook)
+    # ------------------------------------------------------------------
+    def update_capacities(self, capacities: Optional[np.ndarray]) -> None:
+        """Feed a per-device capacity vector into the knapsack and force
+        the next LB round to rebalance against it (shared API with
+        ``BoxRuntime``)."""
+        self.balancer.set_capacities(capacities)
+        self.balancer.force_rebalance()
+
+    # ------------------------------------------------------------------
+    # observability (diagnostic fetches; never on the hot path)
+    # ------------------------------------------------------------------
+    def total_alive(self) -> int:
+        """Alive particles across all boxes and species, from the last
+        fetched interval history (no extra device sync)."""
+        return int(self._alive_by_box.sum())
+
+    def box_counts(self) -> np.ndarray:
+        """Alive particles per box (all species), from the last interval."""
+        return self._alive_by_box.copy()
+
+    @property
+    def fields(self) -> Fields:
+        """Global field state assembled from the sharded slot tiles."""
+        grid = self.grid
+        tiles = np.asarray(jax.device_get(self._tiles))  # (S, 6, bnz, bnx)
+        out = np.zeros((6, grid.nz, grid.nx), np.float32)
+        for s, b in enumerate(self._slot_box):
+            bz, bx = grid.box_coords[b]
+            out[
+                :,
+                bz * grid.box_nz : (bz + 1) * grid.box_nz,
+                bx * grid.box_nx : (bx + 1) * grid.box_nx,
+            ] = tiles[s]
+        return Fields(*(jnp.asarray(c) for c in out))

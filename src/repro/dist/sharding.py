@@ -20,7 +20,14 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["default_rules", "spec_for", "tree_shardings", "batch_sharding"]
+__all__ = [
+    "default_rules",
+    "runtime_rules",
+    "spec_for",
+    "tree_shardings",
+    "batch_sharding",
+    "state_shardings",
+]
 
 #: a rule value: one mesh axis, several (sharded jointly), or replicate
 Rule = Union[str, Tuple[str, ...], None]
@@ -54,6 +61,36 @@ def default_rules(mesh: Mesh, *, expert_sharding: str = "tp") -> Dict[Optional[s
         "layers": None,  # scanned stack axis stays local
     }
     return rules
+
+
+def runtime_rules(mesh: Mesh, *, axis: str = "boxes") -> Dict[Optional[str], Rule]:
+    """Rule table for the distributed PIC runtimes' slot-major state.
+
+    The sharded runtime stacks per-box state along a leading ``boxes``
+    (slot) axis and shards only that axis over the 1-D box mesh
+    (``repro.launch.mesh.make_box_mesh``); everything trailing — field
+    components, tile cells, particle capacity — stays local to the owner
+    device.  Falls back to replication when the mesh has no such axis, so
+    the same code path runs on a single-device mesh.
+    """
+    return {None: None, "boxes": axis if axis in mesh.axis_names else None}
+
+
+def state_shardings(state, mesh: Mesh, rules: Optional[Dict] = None):
+    """NamedShardings for a slot-major runtime state pytree.
+
+    Every array leaf is treated as logical axes ``("boxes", None, ...)`` —
+    dim 0 sharded over the box axis, the rest replicated — and routed
+    through :func:`spec_for`, so the divisibility and single-use fallbacks
+    apply exactly as for model parameters (a slot count not divisible by
+    the mesh replicates instead of failing to place).
+    """
+    if rules is None:
+        rules = runtime_rules(mesh)
+    axes = jax.tree.map(
+        lambda a: ("boxes",) + (None,) * (max(1, a.ndim) - 1), state
+    )
+    return tree_shardings(axes, state, mesh, rules)
 
 
 def _axes_tuple(rule: Rule) -> Tuple[str, ...]:

@@ -1,21 +1,56 @@
 """Production mesh construction.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod);
 multi-pod: 2x16x16 = 512 chips with a leading 'pod' axis (data-parallel
 across pods; the slow-link axis for gradient sync / compression).
+``make_box_mesh`` is the 1-D device ring the distributed PIC runtimes
+(``repro.dist.sharded_runtime``) shard box slots over.
 """
 from __future__ import annotations
 
-import jax
+from typing import Optional, Sequence
 
-__all__ = ["make_production_mesh", "require_devices"]
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_box_mesh", "require_devices"]
+
+#: mesh axis name the PIC runtimes shard box slots over
+BOX_AXIS = "boxes"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_box_mesh(
+    n_devices: int,
+    *,
+    devices: Optional[Sequence] = None,
+    axis_name: str = BOX_AXIS,
+) -> Mesh:
+    """1-D mesh ('{axis_name}',) over the first ``n_devices`` devices.
+
+    The sharded PIC runtime block-shards its slot-major state arrays over
+    this axis and runs its halo/emigration collectives around the ring.  On
+    CPU, fake the devices with ``REPRO_HOST_DEVICES=N`` (pytest) or
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax import.
+    """
+    avail = list(devices) if devices is not None else jax.devices()
+    if len(avail) < n_devices:
+        raise RuntimeError(
+            f"mesh needs {n_devices} devices but only {len(avail)} are "
+            "visible; on CPU set REPRO_HOST_DEVICES (pytest) or "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before the "
+            "first jax import"
+        )
+    return Mesh(np.array(avail[:n_devices]), (axis_name,))
 
 
 def require_devices(n: int) -> None:

@@ -15,7 +15,14 @@ import numpy as np
 
 from .grid import Grid2D
 
-__all__ = ["BoxDecomposition", "halo_paste_plan", "halo_fold_plan"]
+__all__ = [
+    "BoxDecomposition",
+    "halo_paste_plan",
+    "halo_fold_plan",
+    "interior_cell_map",
+    "padded_cell_map",
+    "neighbor_box_table",
+]
 
 
 @dataclass
@@ -39,6 +46,7 @@ class BoxDecomposition:
         return self.grid.box_neighbors
 
     def box_slices(self, box_id: int) -> Tuple[slice, slice]:
+        """(z, x) slices of ``box_id``'s interior in the global grid."""
         bz, bx = self.coords[box_id]
         g = self.grid
         return (
@@ -133,3 +141,83 @@ def halo_fold_plan(grid: Grid2D, halo: int):
     density on the whole padded tile.
     """
     return _plan(grid, halo, src_halo=halo)
+
+
+# ---------------------------------------------------------------------------
+# Dense index tables for the single-program sharded runtime
+#
+# ``BoxRuntime`` walks the slice plans on the host, one ``device_put`` per
+# strip — O(boxes) host dispatches per step.  ``repro.dist.sharded_runtime``
+# runs the whole exchange *inside* one XLA program, where slice plans are
+# useless (shapes must be static and uniform) but dense gather/scatter index
+# tables are exactly what ``jnp`` wants:
+#
+#   * the paste becomes one gather (padded tile cell <- global cell),
+#   * the fold becomes one scatter-add (padded deposit cell -> global cell),
+#
+# with the *same* geometry: both tables are derived from the slice plans
+# above, so the runtimes can never disagree about which cell goes where.
+# ---------------------------------------------------------------------------
+
+
+def interior_cell_map(grid: Grid2D) -> np.ndarray:
+    """Flat global cell index of each interior cell of each box.
+
+    Returns int32 ``(n_boxes, box_nz, box_nx)`` with
+    ``map[b, i, k] = gz * nx + gx`` for interior cell ``(i, k)`` of box
+    ``b``.  Together the entries cover ``[0, nz * nx)`` exactly once
+    (boxes tile the grid), so a ``.set`` scatter through this table
+    reassembles the global array from box interiors.
+    """
+    bs_z, bs_x = grid.box_nz, grid.box_nx
+    out = np.empty((grid.n_boxes, bs_z, bs_x), np.int32)
+    iz = np.arange(bs_z)[:, None]
+    ix = np.arange(bs_x)[None, :]
+    for b, (bz, bx) in enumerate(grid.box_coords):
+        out[b] = (bz * bs_z + iz) * grid.nx + (bx * bs_x + ix)
+    return out
+
+
+def padded_cell_map(grid: Grid2D, halo: int) -> np.ndarray:
+    """Flat global cell index of each *padded-tile* cell of each box.
+
+    Returns int32 ``(n_boxes, box_nz + 2*halo, box_nx + 2*halo)`` where
+    entry ``(b, i, k)`` is the (periodically wrapped) global cell that
+    padded cell ``(i, k)`` of box ``b`` aliases.  Derived by walking
+    :func:`halo_paste_plan` (whose target regions are disjoint and cover the
+    padded tile), so it inherits the plans' tested wrap geometry.  Used both
+    ways by the sharded runtime: as a gather table (slice a padded tile out
+    of a global array — the paste) and as a scatter-add table (fold padded
+    deposit tiles back onto the global grid — the fold).
+    """
+    bs_z, bs_x = grid.box_nz, grid.box_nx
+    pnz, pnx = bs_z + 2 * halo, bs_x + 2 * halo
+    out = np.full((grid.n_boxes, pnz, pnx), -1, np.int32)
+    for b, entries in enumerate(halo_paste_plan(grid, halo)):
+        for src, (tz, tx), (sz, sx) in entries:
+            sbz, sbx = grid.box_coords[src]
+            gz = sbz * bs_z + np.arange(sz.start, sz.stop)[:, None]
+            gx = sbx * bs_x + np.arange(sx.start, sx.stop)[None, :]
+            out[b, tz, tx] = gz * grid.nx + gx
+    assert (out >= 0).all(), "paste plan must cover the padded tile"
+    return out
+
+
+def neighbor_box_table(grid: Grid2D) -> np.ndarray:
+    """Periodic 9-point neighbourhood per box, shape ``(n_boxes, 9)``.
+
+    Column order is row-major over ``(dz, dx) in {-1,0,1}^2`` (column 4 is
+    the box itself).  This is the set of boxes a particle can reach in one
+    step (one-cell excursion bound), i.e. the only legal destinations of the
+    sharded runtime's emigration all-to-all; tests use it to assert that.
+    """
+    out = np.empty((grid.n_boxes, 9), np.int64)
+    for b, (bz, bx) in enumerate(grid.box_coords):
+        col = 0
+        for dz in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                out[b, col] = ((bz + dz) % grid.boxes_z) * grid.boxes_x + (
+                    (bx + dx) % grid.boxes_x
+                )
+                col += 1
+    return out

@@ -54,6 +54,8 @@ __all__ = [
     "StepOutputs",
     "particle_phase",
     "field_phase",
+    "particle_phase_stacked",
+    "field_phase_stacked",
     "build_step_body",
     "make_interval_fn",
 ]
@@ -144,6 +146,85 @@ def field_phase(
     if sponge is not None:
         fields = apply_sponge(fields, sponge)
     return fields
+
+
+def particle_phase_stacked(
+    tiles6: jax.Array,
+    species: Tuple[Particles, ...],
+    origins: jax.Array,
+    local_grid: Grid2D,
+    *,
+    domain_grid: Grid2D,
+    shape_order: int = 3,
+):
+    """Slot-batched :func:`particle_phase`: many padded box tiles at once.
+
+    The collective-aware variant used by ``repro.dist.sharded_runtime``:
+    each device owns a stack of box *slots* and advances all of them in one
+    vmapped call between collectives, instead of one jit dispatch per box
+    (``BoxRuntime``).  Inputs carry a leading slot axis — ``tiles6`` is
+    ``(slots, 6, pnz, pnx)``, ``origins`` is ``(slots, 2)`` (physical
+    position of each tile's cell ``(0, 0)``), and every ``Particles`` leaf
+    is ``(slots, cap)`` except the scalar ``q``/``m``.
+
+    Returns ``(species', j3, counts)`` with ``j3`` the stacked
+    ``(slots, 3, pnz, pnx)`` per-tile deposits (still un-folded — the
+    caller owns the cross-box current fold) and ``counts`` the ``(slots,)``
+    alive-particle counts, summed over species.
+    """
+
+    def one(tile6, sp, origin):
+        sp2, (jx, jy, jz), counts = particle_phase(
+            Fields(*tile6),
+            sp,
+            local_grid,
+            shape_order,
+            domain_grid=domain_grid,
+            origin=(origin[0], origin[1]),
+        )
+        return sp2, jnp.stack([jx, jy, jz]), counts[0]
+
+    sp_axes = tuple(
+        Particles(z=0, x=0, ux=0, uy=0, uz=0, w=0, alive=0, q=None, m=None)
+        for _ in species
+    )
+    return jax.vmap(one, in_axes=(0, sp_axes, 0))(tiles6, species, origins)
+
+
+def field_phase_stacked(
+    tiles6: jax.Array,
+    j3: jax.Array,
+    static2: jax.Array,
+    t,
+    local_grid: Grid2D,
+    halo: int,
+    *,
+    laser=None,
+) -> jax.Array:
+    """Slot-batched :func:`field_phase` on padded tiles, keeping interiors.
+
+    ``tiles6``/``j3`` are ``(slots, 6|3, pnz, pnx)`` padded E,B / folded J
+    tiles; ``static2`` is ``(slots, 2, pnz, pnx)`` holding each slot's
+    sponge mask and laser injection profile (``LaserAntenna.profile``
+    sliced per box).  Returns the advanced ``(slots, 6, bnz, bnx)``
+    interiors — with ``halo >= 4`` the three one-cell-deep leapfrog
+    sub-updates never contaminate the interior, so the result matches the
+    global solver to f32 rounding (same argument as ``BoxRuntime``).
+    """
+
+    def one(tile6, j, static):
+        f = field_phase(
+            Fields(*tile6),
+            tuple(j),
+            local_grid,
+            sponge=static[0],
+            laser=laser,
+            t=t,
+            laser_profile=static[1],
+        )
+        return jnp.stack(f)[:, halo:-halo, halo:-halo]
+
+    return jax.vmap(one)(tiles6, j3, static2)
 
 
 def build_step_body(

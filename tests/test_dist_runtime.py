@@ -157,6 +157,94 @@ def test_box_runtime_spreads_state_across_devices():
 
 
 # ---------------------------------------------------------------------------
+# sharding rules: spec_for fallback paths (pure logic, no devices needed)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 4, "model": 2}
+
+
+def test_spec_for_tuple_rule_shards_over_product_extent():
+    """A tuple rule shards one dim over several mesh axes jointly; the
+    divisibility fallback applies to the *product* extent."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import spec_for
+
+    rules = {None: None, "batch": ("data", "model"), "embed": "data"}
+    # 8 % (4*2) == 0: jointly sharded
+    assert spec_for(("batch", None), (8, 3), rules, _FakeMesh()) == P(("data", "model"), None)
+    # 12 % 8 != 0: replicated instead of unevenly sharded
+    assert spec_for(("batch", None), (12, 3), rules, _FakeMesh()) == P(None, None)
+
+
+def test_spec_for_single_use_applies_to_tuple_rules():
+    """A mesh axis consumed by an earlier dim (even inside a tuple rule)
+    replicates any later dim asking for it."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import spec_for
+
+    rules = {None: None, "batch": ("data", "model"), "vocab": "model"}
+    assert spec_for(("batch", "vocab"), (8, 4), rules, _FakeMesh()) == P(
+        ("data", "model"), None
+    )
+    # order matters: vocab claims 'model' first, so batch's tuple is blocked
+    assert spec_for(("vocab", "batch"), (4, 8), rules, _FakeMesh()) == P("model", None)
+
+
+def test_spec_for_unknown_axis_replicates():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import spec_for
+
+    assert spec_for(("nonexistent", None), (8, 3), {None: None}, _FakeMesh()) == P(None, None)
+
+
+@multi_device
+def test_batch_sharding_shape_fallback():
+    """global_batch not divisible by the data axes (e.g. batch=1 decode)
+    must replicate, not split unevenly."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import batch_sharding, default_rules
+
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    rules = default_rules(mesh)
+    assert batch_sharding(mesh, rules, shape=(4, 16)).spec == P(("data",), None)
+    # batch=1 decode: 1 % 2 != 0 -> fully replicated
+    assert batch_sharding(mesh, rules, shape=(1, 16)).spec == P()
+
+
+def test_runtime_rules_and_state_shardings():
+    """Slot-major state shards dim 0 over the box axis, and degrades to
+    replication on a mesh without one."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import runtime_rules, state_shardings
+    from repro.launch.mesh import make_box_mesh
+
+    mesh = make_box_mesh(1)
+    state = (jnp.zeros((4, 6, 8, 8)), ({"z": jnp.zeros((4, 16))},))
+    sh = state_shardings(state, mesh)
+    assert sh[0].spec == P("boxes", None, None, None)
+    assert sh[1][0]["z"].spec == P("boxes", None)
+
+    # a mesh without a 'boxes' axis degrades to replication (jax.make_mesh
+    # needs >= 0.4.35; build the Mesh directly for the min-version lane)
+    from jax.sharding import Mesh
+
+    other = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    assert runtime_rules(other)["boxes"] is None
+    assert state_shardings(state, other)[0].spec == P(None, None, None, None)
+
+
+# ---------------------------------------------------------------------------
 # sharding rules against the real parameter trees
 # ---------------------------------------------------------------------------
 

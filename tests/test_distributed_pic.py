@@ -82,3 +82,79 @@ def test_box_runtime_8_devices():
     assert r["lb_events"] >= 1 and r["adoptions"] >= 1, r
     # physics agrees with the single-host reference (same laser injection)
     assert r["field_energy_rt"] == pytest.approx(r["field_energy_ref"], rel=0.05), r
+
+
+SHARDED_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+
+from repro.dist.sharded_runtime import ShardedRuntime
+from repro.pic import Simulation, SimConfig, laser_ion_problem
+
+problem = laser_ion_problem(nz=64, nx=64, box_cells=8, ppc=4, seed=0)  # 64 boxes
+rt = ShardedRuntime(problem, n_devices=8, lb_interval=2)
+n0 = rt.total_alive()
+rt.run(6)  # three LB intervals, each one fused program
+
+problem2 = laser_ion_problem(nz=64, nx=64, box_cells=8, ppc=4, seed=0)
+ref = Simulation(problem2, SimConfig(lb_enabled=False, sponge_width=8))
+ref.run(6)
+
+f_rt = np.stack([np.asarray(c) for c in rt.fields])
+f_ref = np.stack([np.asarray(c) for c in ref.fields])
+result = {
+    "n0": n0,
+    "n_final": rt.total_alive(),
+    "dropped": rt.dropped_total,
+    "host_syncs": rt.host_syncs,
+    "host_dispatches": rt.host_dispatches,
+    "n_devices_used": len(rt.devices_in_use()),
+    "adoptions": sum(e.adopted for e in rt.balancer.events),
+    "lb_events": len(rt.balancer.events),
+    "boxes_per_device": np.bincount(rt.balancer.mapping, minlength=8).tolist(),
+    "field_err": float(np.abs(f_rt - f_ref).max()),
+    "field_scale": float(np.abs(f_ref).max()),
+    "field_energy_rt": float(rt.history["field_energy"][-1]),
+    "field_energy_ref": float(ref.history["field_energy"][-1]),
+}
+print("RESULT " + json.dumps(result))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_runtime_8_devices():
+    """The acceptance configuration: 64 boxes / 8 fake devices, one fused
+    program + one device->host sync per LB interval, f32-rounding agreement
+    with the global reference solver."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARDED_SUBPROCESS_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    r = json.loads(line[len("RESULT "):])
+
+    # particle conservation, no capacity-bound losses
+    assert r["n_final"] == r["n0"], r
+    assert r["dropped"] == 0, r
+    # exactly one device->host sync per LB interval (6 steps / interval 2)
+    assert r["host_syncs"] == 3, r
+    # O(1) host dispatches per interval, not O(boxes) per step: the 64-box
+    # run issues 1 commit + 3 interval programs + 2 per adoption
+    assert r["host_dispatches"] <= 1 + 3 + 2 * r["adoptions"], r
+    # state spread over all 8 devices, equal-count mapping maintained
+    assert r["n_devices_used"] == 8, r
+    assert set(r["boxes_per_device"]) == {8}, r
+    # the balancer ran and adopted (initial imbalance is large)
+    assert r["lb_events"] >= 1 and r["adoptions"] >= 1, r
+    # f32-rounding agreement with the global solver
+    assert r["field_err"] <= 1e-5 * max(r["field_scale"], 1e-30), r
+    assert r["field_energy_rt"] == pytest.approx(r["field_energy_ref"], rel=1e-4), r
