@@ -6,6 +6,13 @@ Run as:  PYTHONPATH=src python -m benchmarks.run [--only <module>]
 ``docs/benchmarks.md`` documents what each measures and how to read its
 output.
 
+``--out FILE`` writes a JSON artifact (the ``BENCH_*.json`` trajectory
+format CI uploads): the run *config* — backend, device count, jax version,
+the env knobs that change the numbers — plus, per module, the wall time
+the module took and its result rows.  Without the config block, artifacts
+from different PRs (different device counts, different comm paths) are
+not comparable; with it they are.
+
 A broken module must not poison the rest of the sweep: its full traceback
 goes to stderr, the CSV gets a short ERROR row, and the remaining modules
 still run; the exit code is non-zero if anything failed.  CI additionally
@@ -21,11 +28,13 @@ import importlib
 import json
 import os
 import sys
+import time
 import traceback
 
 MODULES = [
     "bench_step_fusion",      # device-resident interval engine vs per-step/seed
     "bench_sharded_runtime",  # single-program sharded vs host-driven box runtime
+    "bench_collectives",      # strip-only neighbor exchange vs all-gather ring
     "bench_cost_schemes",     # Fig 6a group 1 + Fig 3
     "bench_policies",         # Fig 6a group 2 + Fig 4
     "bench_box_size",         # Fig 6a group 3
@@ -78,6 +87,27 @@ def check_imports() -> int:
     return failures
 
 
+def run_config() -> dict:
+    """The knobs that make two benchmark artifacts (in)comparable:
+    backend + device count + jax version + the comm/runtime env.  Touches
+    jax, so it must run only *after* the benchmark modules have imported
+    (each module calls ``set_performance_flags()`` before backend init;
+    querying the backend first would silently discard those flags)."""
+    import jax
+
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python_version": sys.version.split()[0],
+        "env": {
+            k: os.environ.get(k, "")
+            for k in ("REPRO_HOST_DEVICES", "XLA_FLAGS")
+            if os.environ.get(k)
+        },
+    }
+
+
 def main() -> None:
     epilog = "benchmark modules:\n" + "\n".join(
         f"  {name:24s} {summary}" for name, summary in module_summaries()
@@ -88,7 +118,11 @@ def main() -> None:
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
     ap.add_argument("--only", default=None, help="run a single bench module")
-    ap.add_argument("--out", default=None, help="also write the CSV to this file")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="write a JSON artifact: run config + per-module wall time + rows",
+    )
     ap.add_argument(
         "--check-imports",
         action="store_true",
@@ -100,28 +134,32 @@ def main() -> None:
         sys.exit(1 if check_imports() else 0)
 
     modules = [args.only] if args.only else MODULES
-    lines = ["name,us_per_call,derived"]
-    print(lines[0])
+    print("name,us_per_call,derived")
     failures = 0
+    report = {"modules": {}}
     for name in modules:
+        t0 = time.perf_counter()
+        entry = {"rows": [], "error": None}
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             for r in mod.run():
-                line = f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])!r}"
-                lines.append(line)
-                print(line)
+                entry["rows"].append(r)
+                print(f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])!r}")
         except Exception as e:
             failures += 1
             # full traceback to stderr (keeps the CSV parseable), short row
             # in the CSV, and carry on with the remaining modules
             print(f"{name}: FAILED", file=sys.stderr)
             traceback.print_exc(file=sys.stderr)
-            line = f"{name},ERROR,{json.dumps(f'{type(e).__name__}: {e}')!r}"
-            lines.append(line)
-            print(line)
+            entry["error"] = f"{type(e).__name__}: {e}"
+            print(f"{name},ERROR,{json.dumps(entry['error'])!r}")
+        entry["wall_s"] = round(time.perf_counter() - t0, 3)
+        report["modules"][name] = entry
+    report["config"] = run_config()  # after the modules' flag setup ran
     if args.out:
         with open(args.out, "w") as fh:
-            fh.write("\n".join(lines) + "\n")
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if failures:
         sys.exit(1)
 

@@ -26,7 +26,9 @@ from .balancer import LBEvent, LoadBalancer, efficiency, make_policy
 from .perfmodel import StrongScalingModel, fit_strong_scaling, predicted_max_speedup
 from .policies import (
     device_loads,
+    hop_radius,
     knapsack_partition,
+    locality_repair,
     morton_index,
     round_robin_mapping,
     sfc_partition,
@@ -50,7 +52,9 @@ __all__ = [
     "fit_strong_scaling",
     "predicted_max_speedup",
     "device_loads",
+    "hop_radius",
     "knapsack_partition",
+    "locality_repair",
     "morton_index",
     "round_robin_mapping",
     "sfc_partition",

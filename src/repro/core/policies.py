@@ -28,6 +28,8 @@ __all__ = [
     "morton_index",
     "device_loads",
     "round_robin_mapping",
+    "locality_repair",
+    "hop_radius",
 ]
 
 
@@ -184,6 +186,87 @@ def _refine_swaps(
                     break
             if not done:
                 return  # no improving move: fixed point
+
+
+# ---------------------------------------------------------------------------
+# Locality-aware refinement (neighbour-collective mappings)
+#
+# The sharded runtime's ``comm="neighbor"`` path exchanges guard strips via
+# per-offset ``ppermute`` hops, so its traffic is bounded by the *ring
+# distance* between a box's owner and the owners of its 8 grid neighbours.
+# The cost-only knapsack is free to scatter boxes anywhere; these helpers
+# pull a proposed mapping back toward the locality-preserving slot curve
+# (``repro.pic.boxes.box_slot_layout``) without disturbing the balance the
+# knapsack found: pure pairwise swaps, preferring partners of similar cost.
+# ---------------------------------------------------------------------------
+
+
+def _ring_dist(n: int, a, b) -> np.ndarray:
+    fwd = (np.asarray(b) - np.asarray(a)) % n
+    return np.minimum(fwd, n - fwd)
+
+
+def hop_radius(mapping, home_devices, n_devices: int) -> int:
+    """Largest ring distance between any box's device and its curve-home
+    device — the displacement metric :func:`locality_repair` bounds (the
+    neighbour exchange's offset set grows with it)."""
+    mapping = np.asarray(mapping)
+    home = np.asarray(home_devices)
+    if len(mapping) == 0:
+        return 0
+    return int(_ring_dist(n_devices, home, mapping).max())
+
+
+def locality_repair(
+    mapping,
+    costs,
+    home_devices,
+    n_devices: int,
+    *,
+    max_shift: int = 1,
+    sweeps: int = 4,
+) -> np.ndarray:
+    """Swap boxes until every box sits within ``max_shift`` ring hops of
+    its curve-home device.  Count-preserving (pure swaps) and best-effort
+    load-preserving: each displaced box trades places with the
+    closest-cost box currently occupying one of its allowed devices whose
+    own home constraint tolerates the box's device.  Boxes that cannot be
+    repaired without breaking a partner's constraint are left in place
+    (the neighbour exchange stays *correct* at any displacement — only its
+    hop set grows), so the result is a repair, not a guarantee.
+    """
+    costs = _as_costs(costs)
+    m = np.asarray(mapping, dtype=np.int64).copy()
+    home = np.asarray(home_devices, dtype=np.int64)
+    if m.shape != home.shape or m.shape != costs.shape:
+        raise ValueError("mapping, costs and home_devices must agree on n_boxes")
+    for _ in range(max(1, sweeps)):
+        disp = _ring_dist(n_devices, home, m)
+        violators = np.where(disp > max_shift)[0]
+        if len(violators) == 0:
+            break
+        moved = False
+        # worst displacement first: those have the fewest options left
+        for b in violators[np.argsort(-disp[violators], kind="stable")]:
+            if _ring_dist(n_devices, home[b], m[b]) <= max_shift:
+                continue  # fixed by an earlier swap this sweep
+            allowed = np.where(_ring_dist(n_devices, home[b], np.arange(n_devices)) <= max_shift)[0]
+            best = None  # (cost gap, partner box)
+            for d in allowed:
+                partners = np.where(m == d)[0]
+                # the partner inherits b's device: its own home must tolerate it
+                ok = partners[_ring_dist(n_devices, home[partners], m[b]) <= max_shift]
+                for b2 in ok:
+                    gap = abs(costs[b] - costs[b2])
+                    if best is None or gap < best[0]:
+                        best = (gap, b2)
+            if best is not None:
+                b2 = best[1]
+                m[b], m[b2] = m[b2], m[b]
+                moved = True
+        if not moved:
+            break
+    return m
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,10 @@ data flow of one LB round, is in ``docs/architecture.md``):
     (``DistributedPICRuntime``): one commit/adoption API
     (``apply_mapping``), one capacity API (``update_capacities``), one
     straggler loop (``StragglerLoop`` via ``attach_straggler_detector``).
-  * ``collectives`` — ``ring_all_gather`` (ppermute ring) + the
-    ``shard_map`` version shim.
+  * ``collectives`` — the in-program exchange primitives:
+    ``neighbor_exchange`` / ``neighbor_reduce`` (strip-only directional
+    ``ppermute`` hops — the ``comm="neighbor"`` path), ``ring_all_gather``
+    (the ``comm="ring"`` reference), and the ``shard_map`` version shim.
   * ``elastic`` — ``ElasticRunner`` / ``DeviceSet``: device failure and
     scale-up mid-run; balancer resize with a one-shot gate bypass.
   * ``straggler`` — ``StragglerDetector``: EWMA work/time throughput ->
@@ -28,7 +30,7 @@ data flow of one LB round, is in ``docs/architecture.md``):
     ``repro.train`` / ``repro.launch`` and the PIC runtimes.
 """
 from .box_runtime import BoxRuntime
-from .collectives import ring_all_gather
+from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather
 from .elastic import DeviceSet, ElasticRunner
 from .runtime_api import DistributedPICRuntime, StragglerLoop
 from .sharded_runtime import ShardedRuntime
@@ -52,6 +54,8 @@ __all__ = [
     "StragglerDetector",
     "batch_sharding",
     "default_rules",
+    "neighbor_exchange",
+    "neighbor_reduce",
     "ring_all_gather",
     "runtime_rules",
     "spec_for",

@@ -9,15 +9,25 @@ provides the in-program replacements used by
 program and cross-device data motion is scheduled by the runtime, not by
 Python.
 
-The primitive is :func:`ring_all_gather`, built from explicit
-``jax.lax.ppermute`` hops around the 1-D device ring: hop ``j`` forwards
-the chunk received at hop ``j - 1`` to the ring successor, so after
-``n - 1`` hops every device holds every shard.  On a TPU torus each hop is
-a single-link neighbour transfer (the ICI-native pattern); on the CPU
-backend XLA lowers it to buffer copies.  The payload is each box's
-*interior* tile — the minimal global information — and the halo paste /
-current fold then reduce to local gathers through the dense index tables of
-``repro.pic.boxes``.
+Two families of primitive live here:
+
+  * :func:`ring_all_gather` — the **reference path** (``comm="ring"``),
+    built from explicit ``jax.lax.ppermute`` hops around the 1-D device
+    ring: hop ``j`` forwards the chunk received at hop ``j - 1`` to the
+    ring successor, so after ``n - 1`` hops every device holds every
+    shard.  The payload is each box's *interior* tile, so every device
+    materializes the global frame — O(n_boxes · tile) traffic per step.
+  * :func:`neighbor_exchange` / :func:`neighbor_reduce` — the
+    **locality-aware path** (``comm="neighbor"``): each device sends one
+    directional payload per *ring offset* it actually shares a guard
+    strip (or emigrant pack) with, one ``ppermute`` per offset.  Under a
+    locality-preserving slot layout (``repro.pic.boxes.box_slot_layout``)
+    the offset set is a handful of near hops, the payloads are the strip
+    tables of ``repro.pic.boxes.halo_strip_tables``, and per-step traffic
+    is O(strip) — the WarpX guard-cell pattern the paper assumes.
+
+On a TPU torus each hop is a single-link neighbour transfer (the
+ICI-native pattern); on the CPU backend XLA lowers it to buffer copies.
 
 Version compatibility mirrors ``repro.pic.sharded``: the ``jax.shard_map``
 and ``jax.lax.axis_size`` fallbacks define the repo's minimum supported jax
@@ -33,7 +43,13 @@ try:  # jax >= 0.6 exposes shard_map at the top level
 except AttributeError:  # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
-__all__ = ["shard_map", "axis_size", "ring_all_gather"]
+__all__ = [
+    "shard_map",
+    "axis_size",
+    "ring_all_gather",
+    "neighbor_exchange",
+    "neighbor_reduce",
+]
 
 
 def axis_size(axis_name: str) -> int:
@@ -69,3 +85,47 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     idx = jax.lax.axis_index(axis_name)
     ordered = stacked[(idx - jnp.arange(n)) % n]
     return ordered.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def neighbor_exchange(payloads, axis_name: str):
+    """Exchange per-offset payloads with ring neighbours.
+
+    ``payloads`` maps a ring offset ``o`` (int, taken mod the axis size) to
+    the pytree this device addresses to the device ``o`` hops *ahead* on
+    the ring.  Every device must supply the same offset keys with the same
+    leaf shapes (the exchange is one ``ppermute`` per offset, so the
+    pattern is static even though the payload contents are data-dependent).
+
+    Returns ``arrivals`` with the same keys: ``arrivals[o]`` is the payload
+    addressed to this device by the device ``o`` hops *behind* it.  Offset
+    ``0`` (a device talking to its own slots) passes through untouched —
+    no collective is emitted for it.
+    """
+    n = axis_size(axis_name)
+    out = {}
+    for o, tree in payloads.items():
+        k = o % n
+        if k == 0:
+            out[o] = tree
+            continue
+        perm = [(i, (i + k) % n) for i in range(n)]
+        out[o] = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis_name, perm), tree
+        )
+    return out
+
+
+def neighbor_reduce(init, payloads, fold_fn, axis_name: str):
+    """:func:`neighbor_exchange`, folding each arrival into ``init``.
+
+    ``fold_fn(acc, offset, arrival) -> acc`` is applied in ascending offset
+    order, so floating-point accumulation order is deterministic across
+    devices and runs.  This is the collective shape of the halo paste
+    (disjoint strips — the fold is a scatter) and the current fold
+    (overlapping strips — the fold is a scatter-add).
+    """
+    arrivals = neighbor_exchange(payloads, axis_name)
+    out = init
+    for o in sorted(arrivals):
+        out = fold_fn(out, o, arrivals[o])
+    return out

@@ -4,9 +4,9 @@
 ``device_put`` per halo strip and a jit dispatch per box per step, O(boxes)
 host operations in the hot path.  ``ShardedRuntime`` is the production
 counterpart: the same physics (the composable ``particle_phase`` /
-``field_phase`` from ``repro.pic.engine``), the same halo geometry (the
-dense index tables of ``repro.pic.boxes``, derived from the slice plans),
-but executed *inside* ``shard_map`` over the 1-D box mesh
+``field_phase`` from ``repro.pic.engine``), the same halo geometry
+(derived from the slice plans of ``repro.pic.boxes``), but executed
+*inside* ``shard_map`` over the 1-D box mesh
 (``repro.launch.mesh.make_box_mesh``) with the whole LB interval fused into
 one ``lax.scan`` — so the host dispatches exactly one program per interval
 and syncs exactly once, to fetch the interval's device-side work-counter
@@ -21,33 +21,56 @@ equal-count knapsack (``max_boxes_per_device=1.0``, cap honoured through
 refinement) keeps every device at exactly ``bpd`` boxes, any adopted
 mapping is realizable as a pure slot permutation.
 
-One step inside the program:
+Two collective modes drive the cross-box data motion (``comm=``):
 
-  1. *Halo paste* — interiors travel the ring (``ring_all_gather``, built
-     from ``jax.lax.ppermute`` hops), are scattered to the global frame
-     through ``interior_cell_map``, and each slot gathers its halo-padded
-     tile through ``padded_cell_map`` — the collective replacement for
-     ``halo_paste_plan``'s host strip copies.
+``"neighbor"`` (default) — **strip-only neighbour collectives**.  Boxes
+are laid out along a locality-preserving slot curve
+(``repro.pic.boxes.box_slot_layout``), so grid-adjacent boxes live on
+ring-adjacent devices, and every cross-box transfer becomes a directional
+payload on a small set of ring offsets (one ``jax.lax.ppermute`` per
+offset — ``repro.dist.collectives.neighbor_exchange``):
+
+  1. *Halo paste* — each device sends, per (slot, direction) pair crossing
+     a device boundary, only the guard strip the neighbouring box needs
+     (``halo_strip_tables``); arrivals scatter straight into the padded
+     tiles.  Nothing global is ever materialized.
   2. *Particle phase* — ``particle_phase_stacked``: all owned slots
-     advance in one vmapped call, emitting per-slot deposits, alive counts
-     and the in-situ executed-work counters.
-  3. *Current fold* — padded deposits travel the ring and scatter-**add**
-     onto the global frame through the same ``padded_cell_map`` (the
-     collective ``halo_fold_plan``); each slot re-gathers its exact global
-     J tile.
+     advance in one vmapped call, emitting per-slot deposits, alive
+     counts and the in-situ executed-work counters.
+  3. *Current fold* — the overlapping deposit strips travel the same
+     directional hops and scatter-**add** into each slot's padded frame
+     (the strip form of ``halo_fold_plan``).
   4. *Field phase* — ``field_phase_stacked`` advances every padded tile
      (sponge + per-box laser profile) and keeps interiors.
-  5. *Emigration* — a capacity-bounded all-to-all: each slot compacts its
-     leavers into a fixed ``(mig_cap,)`` pack tagged with destination box
-     ids, the packs travel the ring, and every slot merges the arrivals
-     addressed to its box with its stayers (overflow is counted, never
-     silently lost).
+  5. *Emigration* — leavers are binned by the ring offset of their
+     destination box's owner into fixed-capacity *destination-aware
+     packs*, one pack per offset per species; each pack rides its single
+     directional hop and every slot merges the arrivals addressed to its
+     box (overflow is counted, never silently lost).  Pack capacities are
+     sized adaptively from the observed per-interval migration demand
+     (grow under pressure, shrink with hysteresis — see
+     :meth:`ShardedRuntime.migration_stats`).
+
+Per-step traffic is O(strip): flat in the number of boxes for a fixed
+device count, where the ring path below is O(n_boxes · tile)
+(``benchmarks/bench_collectives.py`` measures both).
+
+``"ring"`` — the reference path: interiors, padded deposits and emigrant
+packs all travel the full ``ppermute`` ring (``ring_all_gather``) and each
+device assembles the global frame through the dense index tables
+(``interior_cell_map`` / ``padded_cell_map``).  Structurally simple and
+mapping-agnostic; kept as the executable specification the neighbour path
+is validated against (both match the global solver to f32 rounding).
 
 On LB adoption the runtime *re-commits the sharding*: the new mapping
 becomes a slot permutation applied on device (one gather program with
 ``out_shardings``; no device→host transfer) so the next interval runs with
-the new placement.  Capacity awareness and the straggler loop ride the
-shared ``repro.dist.runtime_api`` surface, same as ``BoxRuntime``.
+the new placement.  In neighbour mode the adopted mapping is first pulled
+back toward the slot curve (``repro.core.policies.locality_repair``) so
+the directional offset set stays small, and the exchange plan is rebuilt
+from the committed ``slot_box`` — correctness never depends on the repair,
+only the hop count does.  Capacity awareness and the straggler loop ride
+the shared ``repro.dist.runtime_api`` surface, same as ``BoxRuntime``.
 """
 from __future__ import annotations
 
@@ -56,11 +79,18 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import LoadBalancer
-from ..launch.mesh import BOX_AXIS, make_box_mesh
-from ..pic.boxes import BoxDecomposition, interior_cell_map, padded_cell_map
+from ..core.policies import hop_radius, locality_repair
+from ..launch.mesh import BOX_AXIS, make_box_mesh, slot_home_devices
+from ..pic.boxes import (
+    BoxDecomposition,
+    box_slot_layout,
+    halo_strip_tables,
+    interior_cell_map,
+    padded_cell_map,
+)
 from ..pic.deposition import box_work_counters
 from ..pic.engine import field_phase_stacked, particle_phase_stacked
 from ..pic.fields import Fields, make_sponge
@@ -69,17 +99,30 @@ from ..pic.particles import Particles, kinetic_energy
 from ..pic.problem import ProblemSetup
 from ..pic.stepper import Simulation
 from .box_runtime import _MIN_HALO, _np_box_ids, _round_up
-from .collectives import ring_all_gather, shard_map
+from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather, shard_map
 from .runtime_api import _StragglerMixin
 from .sharding import state_shardings
 
 __all__ = ["ShardedRuntime"]
 
-#: particle-buffer float fields travelling through the emigration all-to-all
+#: particle-buffer float fields travelling through the emigration exchange
 _PKEYS = ("z", "x", "ux", "uy", "uz", "w")
 
 #: vmap axes for slot-stacked Particles (scalar charge/mass not batched)
 _P_AXES = Particles(z=0, x=0, ux=0, uy=0, uz=0, w=0, alive=0, q=None, m=None)
+
+#: emigrant-pack capacity floor (adaptive resizing never goes below this)
+_MIN_MIG = 16
+
+
+def _pad_tables(tables) -> np.ndarray:
+    """Stack per-direction index arrays into one ``(8, m_max)`` int32 table,
+    padding with ``-1`` (the receivers route padding to a dump cell)."""
+    m = max(len(t) for t in tables)
+    out = -np.ones((len(tables), m), np.int32)
+    for j, t in enumerate(tables):
+        out[j, : len(t)] = t
+    return out
 
 
 class ShardedRuntime(_StragglerMixin):
@@ -96,9 +139,33 @@ class ShardedRuntime(_StragglerMixin):
                   one fused program.
     halo:         guard depth of the per-slot tiles (>= 4, as
                   ``BoxRuntime``).
-    mig_cap:      per-slot, per-species emigrant capacity of the in-program
-                  all-to-all (default ``max(16, cap // 8)``); overflow is
-                  counted in ``dropped_total`` rather than silently lost.
+    comm:         ``"neighbor"`` (default) exchanges only guard strips and
+                  destination-aware emigrant packs over directional
+                  ``ppermute`` hops; ``"ring"`` is the reference
+                  all-gather path (see the module docstring).
+    layout:       slot curve for ``comm="neighbor"`` —
+                  ``"morton"`` (default) or ``"row"``
+                  (``repro.pic.boxes.box_slot_layout``).  The initial
+                  mapping follows the curve (curve-contiguous device
+                  blocks); ``comm="ring"`` keeps the balancer's
+                  round-robin initial mapping.
+    locality_shift: adopted mappings are repaired so no box sits more than
+                  this many ring hops from its curve-home device
+                  (``repro.core.policies.locality_repair``; neighbour mode
+                  only).
+    mig_cap:      initial per-pack, per-species emigrant capacity of the
+                  destination-aware exchange (default
+                  ``max(16, cap // 8)``).  With ``adaptive_mig`` (default)
+                  the capacity then tracks the observed per-interval
+                  migration demand: packs grow when demand exceeds half
+                  the capacity and shrink (after ``mig_patience`` quiet
+                  intervals) when demand stays under a quarter of it;
+                  overflow is counted in ``dropped_total`` rather than
+                  silently lost, and resizes are logged in
+                  :meth:`migration_stats`.
+    adaptive_mig / mig_patience: the demand-driven capacity controller
+                  (disable for strictly static shapes — each resize
+                  recompiles the interval program).
     policy / improvement_threshold / shape_order / sponge_width /
     capacity_margin / capacity_round / devices: as ``BoxRuntime``.  The
                   knapsack runs with ``max_boxes_per_device=1.0`` (equal
@@ -113,6 +180,9 @@ class ShardedRuntime(_StragglerMixin):
         lb_interval: int = 10,
         *,
         halo: int = _MIN_HALO,
+        comm: str = "neighbor",
+        layout: str = "morton",
+        locality_shift: int = 1,
         policy: str = "knapsack",
         improvement_threshold: float = 0.10,
         shape_order: int = 3,
@@ -120,6 +190,8 @@ class ShardedRuntime(_StragglerMixin):
         capacity_margin: float = 2.0,
         capacity_round: int = 64,
         mig_cap: Optional[int] = None,
+        adaptive_mig: bool = True,
+        mig_patience: int = 3,
         devices: Optional[Sequence] = None,
     ):
         grid = problem.grid
@@ -134,13 +206,20 @@ class ShardedRuntime(_StragglerMixin):
                 f"{grid.n_boxes} boxes do not split evenly over {n_devices} "
                 "devices; the sharded runtime needs equal-count slots"
             )
+        if comm not in ("ring", "neighbor"):
+            raise ValueError(f"comm must be 'ring' or 'neighbor', got {comm!r}")
         self.grid = grid
         self.laser = problem.laser
         self.decomp = BoxDecomposition(grid)
         self.halo = halo
+        self.comm = comm
+        self.layout = layout
+        self.locality_shift = int(locality_shift)
         self.shape_order = shape_order
         self.n_devices = n_devices
         self.lb_interval = lb_interval
+        self.adaptive_mig = bool(adaptive_mig)
+        self.mig_patience = int(mig_patience)
         self.t = 0.0
         self.step_idx = 0
         #: host dispatches (programs launched + host->device commits)
@@ -149,6 +228,8 @@ class ShardedRuntime(_StragglerMixin):
         self.host_syncs = 0
         #: emigrants lost to the capacity bound (should stay 0; see mig_cap)
         self.dropped_total = 0
+        #: emigrant-pack resize events (adaptive mig_cap controller)
+        self.mig_events: List[Dict] = []
 
         self.mesh = make_box_mesh(n_devices, devices=devices)
         self.devices = list(np.ravel(self.mesh.devices))
@@ -170,6 +251,7 @@ class ShardedRuntime(_StragglerMixin):
         )
         self._cell_map = padded_cell_map(grid, halo)  # (n_boxes, pn, pn)
         self._int_map = interior_cell_map(grid)  # (n_boxes, bnz, bnx)
+        self._strips = halo_strip_tables(grid, halo)
         self._origins = np.stack(
             [
                 [(bz * grid.box_nz - halo) * grid.dz, (bx * grid.box_nx - halo) * grid.dx]
@@ -195,16 +277,31 @@ class ShardedRuntime(_StragglerMixin):
             statics.append(np.stack([sponge_g[sz, sx], prof_g[sz, sx]]))
         self._statics = np.stack(statics).astype(np.float32)  # (n_boxes, 2, pn, pn)
 
-        # -- initial slot assignment + state commit -----------------------
+        # -- locality curve + initial slot assignment + state commit ------
+        self._curve = (
+            box_slot_layout(grid, layout)
+            if comm == "neighbor"
+            else np.arange(grid.n_boxes, dtype=np.int64)
+        )
+        self._home_dev = slot_home_devices(self._curve, n_devices)
+        if comm == "neighbor":
+            # start from the curve-contiguous mapping: perfectly
+            # equal-count, and every neighbour hop is as short as the
+            # curve allows (the balancer adopts away from it as costs ask)
+            self.balancer.mapping = self._home_dev.astype(np.int64).copy()
         self._qm = [(float(p.q), float(p.m)) for p in problem.species]
         self._slot_box = self._slots_from_mapping(self.balancer.mapping)
+        self._offsets: Tuple[int, ...] = ()
+        self._pair_caps: Dict[int, int] = {}
+        self._build_comm_plan()
         self._caps: List[int] = []
-        self._mig_caps: List[int] = []
+        self._mig_caps: List[Dict[int, int]] = []
+        self._mig_idle: Dict[Tuple[int, int], int] = {}
         tiles, species = self._pack_initial(
             problem.species, capacity_margin, capacity_round, mig_cap
         )
         self._commit_state(tiles, species)
-        self._interval_cache: Dict[int, Callable] = {}
+        self._interval_cache: Dict[Tuple, Callable] = {}
         self._reorder_fn = None
 
         self.history: Dict[str, List] = {
@@ -217,12 +314,15 @@ class ShardedRuntime(_StragglerMixin):
     # placement: slots <-> boxes <-> devices
     # ------------------------------------------------------------------
     def _slots_from_mapping(self, mapping: np.ndarray) -> np.ndarray:
-        """Initial slot_box: device ``d``'s slots hold its boxes in id order."""
+        """Initial slot_box: device ``d``'s slots hold its boxes in curve
+        order (box-id order for ``comm="ring"``, where the curve is the
+        identity)."""
         slot_box = np.empty(self.grid.n_boxes, np.int64)
         for d in range(self.n_devices):
             boxes = np.where(np.asarray(mapping) == d)[0]
             if len(boxes) != self._bpd:
                 raise ValueError("mapping must give every device the same box count")
+            boxes = boxes[np.argsort(self._curve[boxes], kind="stable")]
             slot_box[d * self._bpd : (d + 1) * self._bpd] = boxes
         return slot_box
 
@@ -233,6 +333,11 @@ class ShardedRuntime(_StragglerMixin):
     def devices_in_use(self) -> List[int]:
         """Distinct device ids currently holding box state."""
         return sorted({self.device_of(b).id for b in range(self.grid.n_boxes)})
+
+    def _slot_of_box(self) -> np.ndarray:
+        inv = np.empty(self.grid.n_boxes, np.int64)
+        inv[self._slot_box] = np.arange(self.grid.n_boxes)
+        return inv
 
     def _commit_state(self, tiles: np.ndarray, species) -> None:
         """Commit slot-major host state to the mesh (initial placement) —
@@ -246,7 +351,176 @@ class ShardedRuntime(_StragglerMixin):
         self._tiles, self._species, self._slot_box_dev = jax.device_put(
             state, state_shardings(state, self.mesh)
         )
+        self._commit_slot_tables()
         self.host_dispatches += 1
+
+    def _commit_slot_tables(self) -> None:
+        """Replicate the host-known slot tables (the inverse mapping the
+        directional routing needs) — the former in-program slot-box ring
+        broadcast, now a host-provided input."""
+        self._slot_of_dev = jax.device_put(
+            jnp.asarray(self._slot_of_box().astype(np.int32)),
+            NamedSharding(self.mesh, P()),
+        )
+        self._sb_all_dev = jax.device_put(
+            jnp.asarray(self._slot_box.astype(np.int32)),
+            NamedSharding(self.mesh, P()),
+        )
+
+    # ------------------------------------------------------------------
+    # the neighbour-exchange plan (host side)
+    # ------------------------------------------------------------------
+    def _build_comm_plan(self) -> None:
+        """Derive the directional exchange plan from the committed
+        ``slot_box``: the set of ring offsets with any (slot, direction)
+        pair on them, and the per-offset pair capacity (max over devices —
+        payload shapes must be uniform).  Offset 0 carries the
+        same-device strips (no collective).  Rebuilt at every adoption;
+        the interval-program cache is keyed on the result, so only a plan
+        *change* recompiles."""
+        if self.comm != "neighbor":
+            self._offsets, self._pair_caps = (), {}
+            return
+        n, bpd = self.n_devices, self._bpd
+        sb = self._slot_box
+        dev_of_box = self._slot_of_box() // bpd
+        send_to = self._strips.src_box[:, list(self._strips.opposite)]  # (S, 8)
+        # pairs are enumerated sender-side: slot s (box sb[s]) sends its
+        # direction-j strip to the owner of send_to[sb[s], j]
+        offs = (dev_of_box[send_to[sb]] - (np.arange(len(sb)) // bpd)[:, None]) % n
+        counts = np.zeros((n, n), np.int64)
+        np.add.at(counts, ((np.arange(len(sb)) // bpd)[:, None], offs), 1)
+        caps = counts.max(axis=0)
+        self._offsets = tuple(int(o) for o in np.nonzero(caps)[0])
+        self._pair_caps = {int(o): int(caps[o]) for o in self._offsets}
+
+    def _plan_key(self) -> Tuple:
+        if self.comm == "ring":
+            return ("ring", tuple(d[0] for d in self._mig_caps))
+        return (
+            "neighbor",
+            self._offsets,
+            tuple(self._pair_caps[o] for o in self._offsets),
+            tuple(tuple(sorted(d.items())) for d in self._mig_caps),
+        )
+
+    def hop_radius(self) -> int:
+        """Largest ring distance between a box's device and its curve-home
+        (0 on the initial neighbour-mode mapping; ``locality_repair``
+        keeps it <= ``locality_shift`` across adoptions)."""
+        return hop_radius(self.balancer.mapping, self._home_dev, self.n_devices)
+
+    def comm_stats(self) -> Dict:
+        """Per-step cross-device traffic of the committed exchange plan.
+
+        Host-side accounting (no device sync): every ``ppermute`` payload
+        byte of one scanned step, from the static plan shapes.  The
+        benchmark claim lives here: ``bytes_per_step`` is O(strip) — flat
+        in the box count — for ``comm="neighbor"`` and O(n_boxes · tile)
+        for ``comm="ring"`` (``benchmarks/bench_collectives.py``).
+        """
+        n, bpd = self.n_devices, self._bpd
+        n_sp = len(self._qm)
+        pnz = self.grid.box_nz + 2 * self.halo
+        pnx = self.grid.box_nx + 2 * self.halo
+        if self.comm == "ring":
+            interior = bpd * 6 * self.grid.box_nz * self.grid.box_nx
+            padded = bpd * 3 * pnz * pnx
+            emig = sum(bpd * d[0] * (len(_PKEYS) + 1) for d in self._mig_caps)
+            # interiors + deposits + per species (dest tags, field pack)
+            hops = (n - 1) * (1 + 1 + 2 * n_sp)
+            return {
+                "comm": "ring",
+                "bytes_per_step": 4 * (n - 1) * (interior + padded + emig),
+                "ppermutes_per_step": hops,
+                "offsets": tuple(range(1, n)) if n > 1 else (),
+            }
+        m_max = max(len(t) for t in self._strips.paste_src)
+        f_max = max(len(t) for t in self._strips.fold_src)
+        cross = [o for o in self._offsets if o % n != 0]
+        pair = sum(self._pair_caps[o] * (6 * m_max + 3 * f_max + 2 * 2) for o in cross)
+        emig = sum(
+            caps.get(o, 0) * (len(_PKEYS) + 1) for caps in self._mig_caps for o in cross
+        )
+        return {
+            "comm": "neighbor",
+            "bytes_per_step": 4 * (pair + emig),
+            "ppermutes_per_step": len(cross) * (2 + n_sp),
+            "offsets": self._offsets,
+            "pair_caps": dict(self._pair_caps),
+            "hop_radius": self.hop_radius(),
+        }
+
+    # ------------------------------------------------------------------
+    # adaptive emigrant-pack capacity (observed-demand controller)
+    # ------------------------------------------------------------------
+    def _mig_keys(self) -> Tuple[int, ...]:
+        """Pack keys: directional ring offsets for the neighbour exchange,
+        or the single per-slot pack (key 0) for the ring path."""
+        return self._offsets if self.comm == "neighbor" else (0,)
+
+    def _init_mig_caps(self, base: int) -> Dict[int, int]:
+        return {int(o): int(base) for o in self._mig_keys()}
+
+    def migration_stats(self) -> Dict:
+        """Emigrant-pack state: per-species pack capacities (keyed by ring
+        offset in neighbour mode), the resize-event log of the adaptive
+        controller, and the overflow count."""
+        return {
+            "comm": self.comm,
+            "caps": [dict(d) for d in self._mig_caps],
+            "resizes": len(self.mig_events),
+            "events": list(self.mig_events),
+            "dropped_total": self.dropped_total,
+        }
+
+    def _adapt_mig(self, demand: np.ndarray) -> None:
+        """Resize emigrant packs from one interval's observed demand.
+
+        ``demand`` is the fetched per-step demand history: per (species,
+        slot) on the ring path, per (species, device, offset) on the
+        neighbour path — in both cases the *pre-capacity* emigrant count,
+        so saturation is visible even while packs overflow.  Grow
+        immediately when peak demand exceeds half the pack (demand beyond
+        the pack is dropped particles); shrink only after
+        ``mig_patience`` consecutive quiet intervals (peak under a
+        quarter), with a floor of ``_MIN_MIG``.
+        """
+        if not self.adaptive_mig:
+            return
+        keys = self._mig_keys()
+        for s in range(len(self._mig_caps)):
+            if self.comm == "neighbor":
+                # (n_steps, n_sp, n_devices * n_offsets)
+                per = demand[:, s, :].reshape(demand.shape[0], self.n_devices, len(keys))
+                peaks = {o: int(per[:, :, i].max()) for i, o in enumerate(keys)}
+            else:
+                peaks = {0: int(demand[:, s, :].max())}
+            for o, peak in peaks.items():
+                cap = self._mig_caps[s][o]
+                idle = self._mig_idle.get((s, o), 0)
+                new = cap
+                if 2 * peak > cap:
+                    new, idle = _round_up(max(2 * peak, _MIN_MIG), 8), 0
+                elif 4 * peak <= cap and cap > _MIN_MIG:
+                    idle += 1
+                    if idle >= self.mig_patience:
+                        new, idle = max(_MIN_MIG, _round_up(2 * max(peak, 1), 8)), 0
+                else:
+                    idle = 0
+                self._mig_idle[(s, o)] = idle
+                if new != cap:
+                    self._mig_caps[s][o] = new
+                    self.mig_events.append(
+                        {
+                            "step": self.step_idx,
+                            "species": s,
+                            "offset": o,
+                            "old": cap,
+                            "new": new,
+                            "peak": peak,
+                        }
+                    )
 
     # ------------------------------------------------------------------
     # initial particle packing (slot-major, fixed capacity)
@@ -272,9 +546,8 @@ class ShardedRuntime(_StragglerMixin):
             counts = np.diff(bounds)
             cap = _round_up(int(counts.max() * margin) if len(ids) else 0, quantum)
             self._caps.append(cap)
-            self._mig_caps.append(
-                int(mig_cap) if mig_cap is not None else max(16, cap // 8)
-            )
+            base = int(mig_cap) if mig_cap is not None else max(_MIN_MIG, cap // 8)
+            self._mig_caps.append(self._init_mig_caps(base))
             buf = {
                 "z": np.empty((S, cap), np.float32),
                 "x": np.empty((S, cap), np.float32),
@@ -302,18 +575,38 @@ class ShardedRuntime(_StragglerMixin):
     # the fused interval program
     # ------------------------------------------------------------------
     def _interval_fn(self, n_steps: int) -> Callable:
-        if n_steps in self._interval_cache:
-            return self._interval_cache[n_steps]
+        key = (n_steps, self._plan_key())
+        if key in self._interval_cache:
+            return self._interval_cache[key]
 
         grid, local_grid, halo = self.grid, self.local_grid, self.halo
         order, laser, dt = self.shape_order, self.laser, grid.dt
-        caps, mig_caps, qm = list(self._caps), list(self._mig_caps), list(self._qm)
+        comm, n_dev, bpd = self.comm, self.n_devices, self._bpd
+        caps, qm = list(self._caps), list(self._qm)
+        mig_caps = [dict(d) for d in self._mig_caps]
+        offsets = self._offsets
+        pair_caps = dict(self._pair_caps)
         CELL_MAP = jnp.asarray(self._cell_map)
         INT_MAP = jnp.asarray(self._int_map)
         STATICS = jnp.asarray(self._statics)
         ORIGINS = jnp.asarray(self._origins)
         CENTERS = jnp.asarray(self._centers)
         dv = np.float32(0.5 * grid.dz * grid.dx)
+        bnz, bnx = grid.box_nz, grid.box_nx
+        pnz, pnx = bnz + 2 * halo, bnx + 2 * halo
+        BNSQ, PNSQ = bnz * bnx, pnz * pnx
+        n_sp = len(qm)
+
+        # directional strip geometry (static; identical for every box)
+        strips = self._strips
+        SEND_TO = jnp.asarray(strips.src_box[:, list(strips.opposite)].astype(np.int32))
+        PASTE_SRC = jnp.asarray(_pad_tables(strips.paste_src))  # (8, m_max)
+        PASTE_DST = jnp.asarray(_pad_tables(strips.paste_dst))
+        FOLD_SRC = jnp.asarray(_pad_tables(strips.fold_src))  # (8, f_max)
+        FOLD_DST = jnp.asarray(_pad_tables(strips.fold_dst))
+        iz = (np.arange(bnz) + halo)[:, None]
+        ix = (np.arange(bnx) + halo)[None, :]
+        INT_IN_PAD = jnp.asarray((iz * pnx + ix).ravel().astype(np.int32))
 
         def to_particles(d: Dict[str, jax.Array], s: int) -> Particles:
             q, m = qm[s]
@@ -323,27 +616,9 @@ class ShardedRuntime(_StragglerMixin):
                 q=jnp.float32(q), m=jnp.float32(m),
             )
 
-        def exchange(p: Particles, s: int, my_box, my_center):
-            """Capacity-bounded emigration all-to-all for one species."""
-            cap, mcap = caps[s], mig_caps[s]
-            new_box = grid.box_of_position(p.z, p.x)  # (bpd, cap) int32
-            stay = p.alive & (new_box == my_box[:, None])
-            emig = p.alive & ~stay
-            # compact leavers into the (mig_cap,) pack, destination-tagged
-            eidx = jnp.argsort(jnp.where(emig, 0, 1), axis=1)[:, :mcap]
-            ev = jnp.take_along_axis(emig, eidx, axis=1)
-            edest = jnp.where(ev, jnp.take_along_axis(new_box, eidx, axis=1), -1)
-            epack = {
-                k: jnp.take_along_axis(getattr(p, k), eidx, axis=1) for k in _PKEYS
-            }
-            dropped_e = emig.sum(axis=1) - ev.sum(axis=1)
-            # the packs travel the ring (one stacked payload per species);
-            # every slot sees every leaver
-            gdest = ring_all_gather(edest, BOX_AXIS).reshape(-1)  # (S*mcap,)
-            gstack = ring_all_gather(
-                jnp.stack([epack[k] for k in _PKEYS], axis=-1), BOX_AXIS
-            ).reshape(-1, len(_PKEYS))
-            gpack = {k: gstack[:, ki] for ki, k in enumerate(_PKEYS)}
+        def make_merge(gdest, gpack, cap):
+            """Per-slot merge of stayers with the arrivals addressed to the
+            slot's box (shared by both comm paths)."""
 
             def merge(stay_r, fields_r, box_r, center_r):
                 valid = jnp.concatenate([stay_r, gdest == box_r])
@@ -361,36 +636,197 @@ class ShardedRuntime(_StragglerMixin):
                 dropped_c = valid.sum() - new_alive.sum()
                 return out, dropped_c
 
-            fields_rows = {k: getattr(p, k) for k in _PKEYS}
-            out, dropped_c = jax.vmap(merge)(stay, fields_rows, my_box, my_center)
-            return out, out["alive"].sum(axis=1), dropped_e + dropped_c
+            return merge
 
-        def local_interval(tiles, species, slot_box, t0):
+        def exchange_ring(p: Particles, s: int, my_box, my_center):
+            """Reference path: every pack rides the full ring (capacity-
+            bounded all-to-all); every slot sees every leaver."""
+            cap, mcap = caps[s], mig_caps[s][0]
+            new_box = grid.box_of_position(p.z, p.x)  # (bpd, cap) int32
+            stay = p.alive & (new_box == my_box[:, None])
+            emig = p.alive & ~stay
+            demand = emig.sum(axis=1)  # per-slot, pre-capacity
+            # compact leavers into the (mig_cap,) pack, destination-tagged
+            eidx = jnp.argsort(jnp.where(emig, 0, 1), axis=1)[:, :mcap]
+            ev = jnp.take_along_axis(emig, eidx, axis=1)
+            edest = jnp.where(ev, jnp.take_along_axis(new_box, eidx, axis=1), -1)
+            epack = {
+                k: jnp.take_along_axis(getattr(p, k), eidx, axis=1) for k in _PKEYS
+            }
+            dropped_e = emig.sum(axis=1) - ev.sum(axis=1)
+            gdest = ring_all_gather(edest, BOX_AXIS).reshape(-1)  # (S*mcap,)
+            gstack = ring_all_gather(
+                jnp.stack([epack[k] for k in _PKEYS], axis=-1), BOX_AXIS
+            ).reshape(-1, len(_PKEYS))
+            gpack = {k: gstack[:, ki] for ki, k in enumerate(_PKEYS)}
+            fields_rows = {k: getattr(p, k) for k in _PKEYS}
+            out, dropped_c = jax.vmap(make_merge(gdest, gpack, cap))(
+                stay, fields_rows, my_box, my_center
+            )
+            return out, out["alive"].sum(axis=1), dropped_e + dropped_c, demand
+
+        def local_interval(tiles, species, slot_box, slot_of, t0):
             # local shapes: tiles (bpd, 6, bnz, bnx); species leaves
-            # (bpd, cap); slot_box (bpd,) — the device's slice of the mapping
-            sb_all = ring_all_gather(slot_box, BOX_AXIS)  # (S,)
+            # (bpd, cap); slot_box (bpd,) — the device's slice of the
+            # mapping; slot_of (S,) — its host-provided inverse, replicated
+            my_dev = jax.lax.axis_index(BOX_AXIS)
             my_origin = ORIGINS[slot_box]
             my_static = STATICS[slot_box]
-            my_cmap = CELL_MAP[slot_box]  # (bpd, pn, pn)
             my_center = CENTERS[slot_box]
-            cmap_all = CELL_MAP[sb_all]  # (S, pn, pn)
-            imap_all = INT_MAP[sb_all]  # (S, bnz, bnx)
             my_box = slot_box
+
+            if comm == "ring":
+                sb_all = ring_all_gather(slot_box, BOX_AXIS)  # (S,)
+                my_cmap = CELL_MAP[slot_box]  # (bpd, pn, pn)
+                cmap_all = CELL_MAP[sb_all]  # (S, pn, pn)
+                imap_all = INT_MAP[sb_all]  # (S, bnz, bnx)
+            else:
+                # directional pair tables, once per interval: slot i sends
+                # its direction-j strip to the owner of SEND_TO[box, j];
+                # bucket the (slot, dir) pairs by ring offset, compacted to
+                # the host-computed per-offset capacity
+                send_to = SEND_TO[slot_box]  # (bpd, 8)
+                off_pair = (slot_of[send_to] // bpd - my_dev) % n_dev
+                flat_off = off_pair.reshape(-1)
+                flat_dst = send_to.reshape(-1)
+                pairs = {}
+                for o in offsets:
+                    fl = flat_off == o
+                    sel = jnp.argsort(jnp.where(fl, 0, 1))[: pair_caps[o]]
+                    valid = fl[sel]
+                    pairs[o] = (
+                        (sel // 8).astype(jnp.int32),
+                        (sel % 8).astype(jnp.int32),
+                        jnp.where(valid, flat_dst[sel], -1).astype(jnp.int32),
+                    )
+
+            def strip_payloads(src_flat, table):
+                """Per-offset (values, dst_box, dir) payloads gathered from
+                ``src_flat`` (bpd, C, cells) through ``table`` (8, m)."""
+                out = {}
+                for o in offsets:
+                    si, dj, dbox = pairs[o]
+                    cells = table[dj]  # (K_o, m)
+                    vals = jnp.take_along_axis(
+                        src_flat[si],
+                        jnp.clip(cells, 0, src_flat.shape[-1] - 1)[:, None, :],
+                        axis=2,
+                    )  # (K_o, C, m)
+                    out[o] = (vals, dbox, dj)
+                return out
+
+            def strip_scatter(table):
+                """Fold an arriving payload into a (C, bpd*PNSQ + 1) flat
+                accumulator (last cell is the dump for padding/invalid)."""
+
+                def fold(acc, o, arr):
+                    vals, dbox, dj = arr
+                    u = slot_of[dbox] - my_dev * bpd  # (K_o,)
+                    cells = table[dj]  # (K_o, m)
+                    ok = (
+                        (dbox >= 0)[:, None]
+                        & (cells >= 0)
+                        & (u >= 0)[:, None]
+                        & (u < bpd)[:, None]
+                    )
+                    idx = jnp.where(ok, u[:, None] * PNSQ + cells, bpd * PNSQ)
+                    nc = vals.shape[1]
+                    return acc.at[:, idx.reshape(-1)].add(
+                        vals.transpose(1, 0, 2).reshape(nc, -1)
+                    )
+
+                return fold
+
+            def halo_paste_neighbor(tiles):
+                tflat = tiles.reshape(bpd, 6, BNSQ)
+                own = (
+                    jnp.arange(bpd, dtype=jnp.int32)[:, None] * PNSQ + INT_IN_PAD[None, :]
+                ).reshape(-1)
+                acc0 = (
+                    jnp.zeros((6, bpd * PNSQ + 1), jnp.float32)
+                    .at[:, own]
+                    .add(tflat.transpose(1, 0, 2).reshape(6, -1), unique_indices=True)
+                )
+                acc = neighbor_reduce(
+                    acc0, strip_payloads(tflat, PASTE_SRC), strip_scatter(PASTE_DST),
+                    BOX_AXIS,
+                )
+                return (
+                    acc[:, : bpd * PNSQ].reshape(6, bpd, pnz, pnx).transpose(1, 0, 2, 3)
+                )
+
+            def current_fold_neighbor(j3):
+                jflat = j3.reshape(bpd, 3, PNSQ)
+                acc0 = jnp.concatenate(
+                    [
+                        j3.transpose(1, 0, 2, 3).reshape(3, -1),
+                        jnp.zeros((3, 1), jnp.float32),
+                    ],
+                    axis=1,
+                )
+                acc = neighbor_reduce(
+                    acc0, strip_payloads(jflat, FOLD_SRC), strip_scatter(FOLD_DST),
+                    BOX_AXIS,
+                )
+                return (
+                    acc[:, : bpd * PNSQ].reshape(3, bpd, pnz, pnx).transpose(1, 0, 2, 3)
+                )
+
+            def exchange_neighbor(p: Particles, s: int):
+                """Destination-aware directional packs: leavers binned by
+                the ring offset of their destination's owner, one hop per
+                offset, arrivals merged into the addressed slots."""
+                cap = caps[s]
+                new_box = grid.box_of_position(p.z, p.x)  # (bpd, cap)
+                stay = p.alive & (new_box == my_box[:, None])
+                emig = (p.alive & ~stay).reshape(-1)
+                nb_flat = new_box.reshape(-1)
+                e_off = (slot_of[nb_flat] // bpd - my_dev) % n_dev
+                fields_flat = {k: getattr(p, k).reshape(-1) for k in _PKEYS}
+                payloads, demand, packed = {}, [], 0
+                for o in offsets:
+                    fl = emig & (e_off == o)
+                    sel = jnp.argsort(jnp.where(fl, 0, 1))[: mig_caps[s][o]]
+                    valid = fl[sel]
+                    pk = jnp.stack([fields_flat[k][sel] for k in _PKEYS], axis=-1)
+                    payloads[o] = (pk, jnp.where(valid, nb_flat[sel], -1))
+                    demand.append(fl.sum())
+                    packed = packed + valid.sum()
+                dropped_e = emig.sum() - packed  # off-plan or overflow
+                arrivals = neighbor_exchange(payloads, BOX_AXIS)
+                gstack = jnp.concatenate([arrivals[o][0] for o in offsets])
+                gdest = jnp.concatenate([arrivals[o][1] for o in offsets])
+                gpack = {k: gstack[:, ki] for ki, k in enumerate(_PKEYS)}
+                fields_rows = {k: getattr(p, k) for k in _PKEYS}
+                out, dropped_c = jax.vmap(make_merge(gdest, gpack, cap))(
+                    stay, fields_rows, my_box, my_center
+                )
+                dropped = dropped_c.at[0].add(dropped_e)
+                return (
+                    out,
+                    out["alive"].sum(axis=1),
+                    dropped,
+                    jnp.stack(demand).astype(jnp.int32),
+                )
 
             def step(carry, i):
                 tiles, species = carry
                 t = t0 + i * dt
-                # 1. halo paste: interiors around the ring -> padded tiles
-                ints_all = ring_all_gather(tiles, BOX_AXIS)  # (S, 6, bnz, bnx)
-                gF = (
-                    jnp.zeros((6, grid.n_cells), jnp.float32)
-                    .at[:, imap_all.reshape(-1)]
-                    .set(
-                        ints_all.transpose(1, 0, 2, 3).reshape(6, -1),
-                        unique_indices=True,
+                # 1. halo paste: guard strips (neighbor) or interiors
+                #    around the full ring (ring reference)
+                if comm == "ring":
+                    ints_all = ring_all_gather(tiles, BOX_AXIS)  # (S, 6, bnz, bnx)
+                    gF = (
+                        jnp.zeros((6, grid.n_cells), jnp.float32)
+                        .at[:, imap_all.reshape(-1)]
+                        .set(
+                            ints_all.transpose(1, 0, 2, 3).reshape(6, -1),
+                            unique_indices=True,
+                        )
                     )
-                )
-                padded = jnp.moveaxis(gF[:, my_cmap], 1, 0)  # (bpd, 6, pn, pn)
+                    padded = jnp.moveaxis(gF[:, my_cmap], 1, 0)  # (bpd, 6, pn, pn)
+                else:
+                    padded = halo_paste_neighbor(tiles)
                 # 2. particle phase on all owned slots at once
                 sp_in = tuple(to_particles(d, s) for s, d in enumerate(species))
                 sp2, j3, counts = particle_phase_stacked(
@@ -398,25 +834,35 @@ class ShardedRuntime(_StragglerMixin):
                     domain_grid=grid, shape_order=order,
                 )
                 work = box_work_counters(counts, grid)
-                # 3. current fold: padded deposits scatter-add to the global
-                #    frame, each slot re-gathers its exact global J tile
-                j_all = ring_all_gather(j3, BOX_AXIS)  # (S, 3, pn, pn)
-                gJ = (
-                    jnp.zeros((3, grid.n_cells), jnp.float32)
-                    .at[:, cmap_all.reshape(-1)]
-                    .add(j_all.transpose(1, 0, 2, 3).reshape(3, -1))
-                )
-                jp = jnp.moveaxis(gJ[:, my_cmap], 1, 0)  # (bpd, 3, pn, pn)
+                # 3. current fold: overlapping deposit strips scatter-add
+                #    into each padded frame (strip form of halo_fold_plan)
+                if comm == "ring":
+                    j_all = ring_all_gather(j3, BOX_AXIS)  # (S, 3, pn, pn)
+                    gJ = (
+                        jnp.zeros((3, grid.n_cells), jnp.float32)
+                        .at[:, cmap_all.reshape(-1)]
+                        .add(j_all.transpose(1, 0, 2, 3).reshape(3, -1))
+                    )
+                    jp = jnp.moveaxis(gJ[:, my_cmap], 1, 0)  # (bpd, 3, pn, pn)
+                else:
+                    jp = current_fold_neighbor(j3)
                 # 4. field phase, keep interiors
                 tiles2 = field_phase_stacked(
                     padded, jp, my_static, t, local_grid, halo, laser=laser
                 )
-                # 5. emigration all-to-all
+                # 5. emigration: destination-aware packs (or the full ring)
                 new_species, alive, dropped = [], 0, 0
+                demand = []
                 ke = 0.0
                 for s, p in enumerate(sp2):
-                    out, alive_s, dropped_s = exchange(p, s, my_box, my_center)
+                    if comm == "ring":
+                        out, alive_s, dropped_s, demand_s = exchange_ring(
+                            p, s, my_box, my_center
+                        )
+                    else:
+                        out, alive_s, dropped_s, demand_s = exchange_neighbor(p, s)
                     new_species.append(out)
+                    demand.append(demand_s)
                     alive = alive + alive_s
                     dropped = dropped + dropped_s
                     ke = ke + jax.vmap(kinetic_energy, in_axes=(_P_AXES,))(
@@ -430,6 +876,7 @@ class ShardedRuntime(_StragglerMixin):
                     "dropped": dropped.astype(jnp.int32),
                     "field_energy": fe,
                     "kinetic_energy": ke,
+                    "emig_demand": jnp.stack(demand).astype(jnp.int32),
                 }
                 return (tiles2, tuple(new_species)), outs
 
@@ -448,16 +895,17 @@ class ShardedRuntime(_StragglerMixin):
             k: sp_hist
             for k in ("counts", "work", "alive", "dropped", "field_energy", "kinetic_energy")
         }
+        specs_ys["emig_demand"] = P(None, None, BOX_AXIS)
         fn = jax.jit(
             shard_map(
                 local_interval,
                 mesh=self.mesh,
-                in_specs=(sp_tiles, specs_species, P(BOX_AXIS), P()),
+                in_specs=(sp_tiles, specs_species, P(BOX_AXIS), P(), P()),
                 out_specs=(sp_tiles, specs_species, specs_ys),
             ),
             donate_argnums=(0, 1),
         )
-        self._interval_cache[n_steps] = fn
+        self._interval_cache[key] = fn
         return fn
 
     # ------------------------------------------------------------------
@@ -490,7 +938,11 @@ class ShardedRuntime(_StragglerMixin):
         lb_due = self.balancer.should_run(self.step_idx)
         fn = self._interval_fn(n_steps)
         self._tiles, self._species, ys = fn(
-            self._tiles, self._species, self._slot_box_dev, jnp.float32(self.t)
+            self._tiles,
+            self._species,
+            self._slot_box_dev,
+            self._slot_of_dev,
+            jnp.float32(self.t),
         )
         self.host_dispatches += 1
         host = jax.device_get(ys)  # the interval's ONLY device->host sync
@@ -506,6 +958,7 @@ class ShardedRuntime(_StragglerMixin):
         alive_box[:, sb] = np.asarray(host["alive"], np.float64)
         self._alive_by_box = alive_box[-1]
         self.dropped_total += int(np.asarray(host["dropped"]).sum())
+        self._adapt_mig(np.asarray(host["emig_demand"]))
         self.history["field_energy"].extend(
             float(v) for v in np.asarray(host["field_energy"]).sum(axis=1)
         )
@@ -526,6 +979,14 @@ class ShardedRuntime(_StragglerMixin):
             )
             if new_mapping is not None:
                 new_mapping = self._equalize(new_mapping, work_box[0])
+                if self.comm == "neighbor":
+                    new_mapping = locality_repair(
+                        new_mapping,
+                        work_box[0],
+                        self._home_dev,
+                        self.n_devices,
+                        max_shift=self.locality_shift,
+                    )
                 self.balancer.mapping = new_mapping
                 self.history["lb_steps"].append(self.step_idx)
                 self._recommit(new_mapping)
@@ -558,7 +1019,10 @@ class ShardedRuntime(_StragglerMixin):
         """Adopt an externally-decided distribution mapping (the shared
         commit/adoption API): update the balancer and re-commit the
         sharding.  The mapping must give every device exactly ``bpd``
-        boxes (use the equal-count knapsack, or repair first)."""
+        boxes (use the equal-count knapsack, or repair first).  In
+        neighbour mode the exchange plan is rebuilt from the committed
+        slots — a low-locality mapping stays correct, it just widens the
+        directional offset set."""
         new = np.asarray(new_mapping, dtype=np.int64)
         if new.shape != (self.grid.n_boxes,) or new.min() < 0 or new.max() >= self.n_devices:
             raise ValueError("mapping must assign every box to a valid device slot")
@@ -572,7 +1036,9 @@ class ShardedRuntime(_StragglerMixin):
 
     def _recommit(self, new_mapping: np.ndarray) -> None:
         """Realize an adopted mapping as a slot permutation, applied on
-        device (one gather program, no device->host transfer)."""
+        device (one gather program, no device->host transfer).  Incoming
+        boxes fill freed slots in curve order, keeping slot order aligned
+        with the locality layout."""
         S, bpd = self.grid.n_boxes, self._bpd
         old_slot_of_box = np.empty(S, np.int64)
         old_slot_of_box[self._slot_box] = np.arange(S)
@@ -588,6 +1054,7 @@ class ShardedRuntime(_StragglerMixin):
                 for b in np.where(new_mapping == d)[0]
                 if new_slot_box[old_slot_of_box[b]] != b
             ]
+            incoming.sort(key=lambda b: self._curve[b])
             free = [s for s in slots if new_slot_box[s] < 0]
             for s, b in zip(free, incoming):
                 new_slot_box[s] = b
@@ -610,6 +1077,23 @@ class ShardedRuntime(_StragglerMixin):
         self._slot_box_dev = jax.device_put(
             slot_dev, state_shardings(slot_dev, self.mesh)
         )
+        self._commit_slot_tables()
+        if self.comm == "neighbor":
+            old_offsets = self._offsets
+            self._build_comm_plan()
+            if self._offsets != old_offsets:
+                # keep learned pack capacities on surviving offsets; new
+                # offsets start from the capacity floor (demand-driven
+                # growth reacts within one interval if they run hot)
+                for s, d in enumerate(self._mig_caps):
+                    self._mig_caps[s] = {
+                        o: d.get(o, _MIN_MIG) for o in self._offsets
+                    }
+                self._mig_idle = {
+                    (s, o): v
+                    for (s, o), v in self._mig_idle.items()
+                    if o in self._offsets
+                }
         self.host_dispatches += 2  # the reorder program + the mapping commit
 
     # ------------------------------------------------------------------

@@ -16,10 +16,51 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_box_mesh", "require_devices"]
+__all__ = [
+    "make_production_mesh",
+    "make_box_mesh",
+    "require_devices",
+    "ring_offset",
+    "ring_distance",
+    "slot_home_devices",
+]
 
 #: mesh axis name the PIC runtimes shard box slots over
 BOX_AXIS = "boxes"
+
+
+def ring_offset(n: int, src, dst):
+    """Forward ring offset ``(dst - src) mod n`` on an ``n``-device ring.
+
+    This is the key the neighbour collectives bucket payloads by: a
+    payload with offset ``o`` travels one ``ppermute`` whose permutation
+    sends every device to its ``o``-th successor (arrays broadcast).
+    """
+    return (np.asarray(dst) - np.asarray(src)) % n
+
+
+def ring_distance(n: int, a, b):
+    """Undirected hop distance between devices ``a`` and ``b`` on the ring
+    (the locality metric ``repro.core.policies.locality_repair`` bounds)."""
+    fwd = ring_offset(n, a, b)
+    return np.minimum(fwd, n - fwd)
+
+
+def slot_home_devices(curve_pos: np.ndarray, n_devices: int) -> np.ndarray:
+    """Home device per box under a locality-preserving slot curve.
+
+    ``curve_pos`` is ``repro.pic.boxes.box_slot_layout``'s slot position
+    per box; with equal-count slot blocks, box ``b``'s home is the device
+    owning curve slot ``curve_pos[b]``.  The locality-aware policies keep
+    boxes within a bounded ring distance of their home so the neighbour
+    exchange's offset set stays small after adoptions.
+    """
+    curve_pos = np.asarray(curve_pos)
+    if len(curve_pos) % n_devices:
+        raise ValueError(
+            f"{len(curve_pos)} slots do not split evenly over {n_devices} devices"
+        )
+    return curve_pos // (len(curve_pos) // n_devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -22,7 +22,18 @@ __all__ = [
     "interior_cell_map",
     "padded_cell_map",
     "neighbor_box_table",
+    "HALO_DIRS",
+    "HaloStripTables",
+    "halo_strip_tables",
+    "box_slot_layout",
 ]
+
+#: the 8 halo-exchange directions, row-major over (dz, dx) in {-1,0,1}^2
+#: minus the box itself — the same enumeration order as the off-centre
+#: columns of :func:`neighbor_box_table`.
+HALO_DIRS: Tuple[Tuple[int, int], ...] = tuple(
+    (dz, dx) for dz in (-1, 0, 1) for dx in (-1, 0, 1) if (dz, dx) != (0, 0)
+)
 
 
 @dataclass
@@ -201,6 +212,133 @@ def padded_cell_map(grid: Grid2D, halo: int) -> np.ndarray:
             out[b, tz, tx] = gz * grid.nx + gx
     assert (out >= 0).all(), "paste plan must cover the padded tile"
     return out
+
+
+# ---------------------------------------------------------------------------
+# Per-direction strip tables for the neighbour-exchange collectives
+#
+# The ring collectives above move *whole interiors* so every device can
+# assemble any tile — O(n_boxes · tile) traffic.  The neighbour-exchange
+# path (``repro.dist.collectives.neighbor_exchange``) moves only the guard
+# strips a box actually shares with each of its 8 topological neighbours —
+# WarpX-style O(strip) traffic.  Because the decomposition is uniform, the
+# strip *geometry* is identical for every box: one (src-cells, dst-cells)
+# index pair per direction serves the whole grid, and only the neighbour
+# *identity* varies per box (``HaloStripTables.src_box``).  Both tables are
+# derived from the same overlap arithmetic as the slice plans, and
+# ``tests/test_collectives.py`` asserts they reproduce
+# ``halo_paste_plan`` / ``halo_fold_plan`` cell for cell.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HaloStripTables:
+    """Directional strip geometry for the neighbour halo exchange.
+
+    For direction ``j`` (``HALO_DIRS[j] = (dz, dx)``), box ``b`` receives
+    from ``src_box[b, j]``:
+
+      * the **paste** strip — ``paste_src[j]`` flat indices into the
+        source's *interior* tile ``(box_nz, box_nx)``, landing at
+        ``paste_dst[j]`` flat indices of ``b``'s padded tile (disjoint
+        across directions; together with the interior they cover the
+        padded tile exactly — the strip form of :func:`halo_paste_plan`);
+      * the **fold** strip — ``fold_src[j]`` flat indices into the
+        source's *padded* deposit tile, accumulated (+=) at
+        ``fold_dst[j]`` of ``b``'s padded frame (the strip form of
+        :func:`halo_fold_plan`).
+
+    ``opposite[j]`` is the direction index of ``(-dz, -dx)``: the box that
+    needs ``b``'s direction-``j`` strip is ``src_box[b, opposite[j]]`` —
+    the sender-side view the exchange plans are built from.
+    """
+
+    halo: int
+    src_box: np.ndarray  # (n_boxes, 8) int64
+    paste_src: Tuple[np.ndarray, ...]  # 8 x (m_j,) int32 into (bnz*bnx)
+    paste_dst: Tuple[np.ndarray, ...]  # 8 x (m_j,) int32 into (pnz*pnx)
+    fold_src: Tuple[np.ndarray, ...]  # 8 x (f_j,) int32 into (pnz*pnx)
+    fold_dst: Tuple[np.ndarray, ...]  # 8 x (f_j,) int32 into (pnz*pnx)
+    opposite: Tuple[int, ...] = (7, 6, 5, 4, 3, 2, 1, 0)
+
+
+def _strip(grid: Grid2D, halo: int, dz: int, dx: int, src_halo: int):
+    """(src_flat, dst_flat) for one direction; src indexes a
+    ``(bs + 2*src_halo)``-shaped source tile, dst the halo-padded frame."""
+    bs_z, bs_x = grid.box_nz, grid.box_nx
+    i0z, i0x = dz * bs_z - src_halo, dx * bs_x - src_halo
+    oz0, oz1 = max(-halo, i0z), min(bs_z + halo, i0z + bs_z + 2 * src_halo)
+    ox0, ox1 = max(-halo, i0x), min(bs_x + halo, i0x + bs_x + 2 * src_halo)
+    assert oz1 > oz0 and ox1 > ox0, "every direction overlaps for halo >= 1"
+    src_nx = bs_x + 2 * src_halo
+    pnx = bs_x + 2 * halo
+    sz = np.arange(oz0 - i0z, oz1 - i0z)[:, None]
+    sx = np.arange(ox0 - i0x, ox1 - i0x)[None, :]
+    tz = np.arange(oz0 + halo, oz1 + halo)[:, None]
+    tx = np.arange(ox0 + halo, ox1 + halo)[None, :]
+    return (
+        (sz * src_nx + sx).ravel().astype(np.int32),
+        (tz * pnx + tx).ravel().astype(np.int32),
+    )
+
+
+def halo_strip_tables(grid: Grid2D, halo: int) -> HaloStripTables:
+    """Per-direction send/recv cell maps for the neighbour halo exchange.
+
+    Same validity domain as the slice plans (``1 <= halo <=
+    min(box_nz, box_nx)``); periodic wrap is inherited from the directional
+    neighbour ids, including the degenerate single-row/column
+    decompositions where a box is its own wrap-around neighbour.
+    """
+    if halo < 1 or halo > min(grid.box_nz, grid.box_nx):
+        raise ValueError(
+            "halo must be in [1, min(box_nz, box_nx)] = "
+            f"[1, {min(grid.box_nz, grid.box_nx)}], got {halo}"
+        )
+    paste_src, paste_dst, fold_src, fold_dst = [], [], [], []
+    for dz, dx in HALO_DIRS:
+        ps, pd = _strip(grid, halo, dz, dx, src_halo=0)
+        fs, fd = _strip(grid, halo, dz, dx, src_halo=halo)
+        paste_src.append(ps)
+        paste_dst.append(pd)
+        fold_src.append(fs)
+        fold_dst.append(fd)
+    src_box = neighbor_box_table(grid)[:, [0, 1, 2, 3, 5, 6, 7, 8]]
+    return HaloStripTables(
+        halo=halo,
+        src_box=src_box,
+        paste_src=tuple(paste_src),
+        paste_dst=tuple(paste_dst),
+        fold_src=tuple(fold_src),
+        fold_dst=tuple(fold_dst),
+    )
+
+
+def box_slot_layout(grid: Grid2D, order: str = "morton") -> np.ndarray:
+    """Locality-preserving curve position of each box, shape ``(n_boxes,)``.
+
+    ``pos[b]`` is box ``b``'s slot along the chosen space-filling curve;
+    the sharded runtime's neighbour-exchange mode places box ``b`` in slot
+    ``pos[b]`` (device ``pos[b] // boxes_per_device``), so grid-adjacent
+    boxes land on mesh-adjacent slots and the directional halo hops stay
+    short on the device ring.  ``order``:
+
+      * ``"morton"`` — Z-order curve (``repro.core.policies.morton_index``):
+        contiguous slot blocks are compact 2-D patches, the layout the
+        locality-aware policies prefer;
+      * ``"row"`` — row-major box ids (identity): slab ownership, the
+        minimal-crossing layout for a 1-D device ring.
+    """
+    if order == "row":
+        return np.arange(grid.n_boxes, dtype=np.int64)
+    if order == "morton":
+        from ..core.policies import morton_index
+
+        z = morton_index(grid.box_coords)
+        pos = np.empty(grid.n_boxes, dtype=np.int64)
+        pos[np.argsort(z, kind="stable")] = np.arange(grid.n_boxes)
+        return pos
+    raise ValueError(f"unknown slot layout {order!r} (use 'morton' or 'row')")
 
 
 def neighbor_box_table(grid: Grid2D) -> np.ndarray:
