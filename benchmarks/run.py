@@ -89,17 +89,28 @@ def check_imports() -> int:
 
 def run_config() -> dict:
     """The knobs that make two benchmark artifacts (in)comparable:
-    backend + device count + jax version + the comm/runtime env.  Touches
-    jax, so it must run only *after* the benchmark modules have imported
-    (each module calls ``set_performance_flags()`` before backend init;
-    querying the backend first would silently discard those flags)."""
+    backend + device count + jax version + the comm/runtime env + the
+    runtime defaults the bench modules construct their runtimes with
+    (``comm``/``pipeline``/``layout`` — a PR that flips a default would
+    otherwise silently change every BENCH trajectory).  Touches jax, so it
+    must run only *after* the benchmark modules have imported (each module
+    calls ``set_performance_flags()`` before backend init; querying the
+    backend first would silently discard those flags)."""
+    import inspect
+
     import jax
 
+    from repro.dist.sharded_runtime import ShardedRuntime
+
+    params = inspect.signature(ShardedRuntime.__init__).parameters
     return {
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "jax_version": jax.__version__,
         "python_version": sys.version.split()[0],
+        "runtime_defaults": {
+            k: params[k].default for k in ("comm", "pipeline", "layout")
+        },
         "env": {
             k: os.environ.get(k, "")
             for k in ("REPRO_HOST_DEVICES", "XLA_FLAGS")

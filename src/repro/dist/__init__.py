@@ -15,7 +15,10 @@ data flow of one LB round, is in ``docs/architecture.md``):
   * ``runtime_api`` — the contract both runtimes implement
     (``DistributedPICRuntime``): one commit/adoption API
     (``apply_mapping``), one capacity API (``update_capacities``), one
-    straggler loop (``StragglerLoop`` via ``attach_straggler_detector``).
+    straggler loop (``StragglerLoop`` via ``attach_straggler_detector``),
+    and one interval-pipeline flag (``pipeline="sync"|"async"`` +
+    ``flush()``, validated by ``validate_pipeline`` — the async
+    double-buffered LB interval and its staleness contract).
   * ``collectives`` — the in-program exchange primitives:
     ``neighbor_exchange`` / ``neighbor_reduce`` (strip-only directional
     ``ppermute`` hops — the ``comm="neighbor"`` path), ``ring_all_gather``
@@ -32,7 +35,7 @@ data flow of one LB round, is in ``docs/architecture.md``):
 from .box_runtime import BoxRuntime
 from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather
 from .elastic import DeviceSet, ElasticRunner
-from .runtime_api import DistributedPICRuntime, StragglerLoop
+from .runtime_api import DistributedPICRuntime, StragglerLoop, validate_pipeline
 from .sharded_runtime import ShardedRuntime
 from .sharding import (
     batch_sharding,
@@ -61,4 +64,5 @@ __all__ = [
     "spec_for",
     "state_shardings",
     "tree_shardings",
+    "validate_pipeline",
 ]

@@ -41,6 +41,16 @@ rebalance, and ``attach_straggler_detector`` closes the loop end-to-end
 see ``repro.dist.runtime_api``), as Miller et al. (arXiv:2003.10406)
 motivate for heterogeneous workers.
 
+Interval pipelining: ``pipeline="async"`` implements the shared staleness
+contract (``repro.dist.runtime_api``) in host-driven form — at an LB
+round the freshly produced work-counter arrays are *kept as futures*
+instead of fetched; they are resolved (and the balancer run, and any
+adoption placed) at the **next** LB round, so the host never blocks on
+the counters at the boundary that produced them and every adoption lands
+exactly one interval late, matching ``ShardedRuntime``'s async timing.
+``flush()`` resolves a pending round early; ``pipeline="sync"`` (default)
+keeps the fetch-balance-adopt sequence at the measuring boundary.
+
 This runtime dispatches O(boxes) host operations per step (counted in
 ``host_dispatches``) — fine for validation, not for production rates; the
 single-program counterpart is ``repro.dist.sharded_runtime`` (see
@@ -62,7 +72,7 @@ from ..pic.fields import Fields, make_sponge
 from ..pic.grid import Grid2D
 from ..pic.particles import Particles
 from ..pic.problem import ProblemSetup
-from .runtime_api import _StragglerMixin
+from .runtime_api import _StragglerMixin, validate_pipeline
 
 __all__ = ["BoxRuntime"]
 
@@ -94,6 +104,12 @@ class BoxRuntime(_StragglerMixin):
                   platform_device_count=N`` or ``REPRO_HOST_DEVICES``).
     lb_interval:  run the LB routine every this many steps (paper: 10).
     halo:         guard depth of the per-box tiles (>= 4; see module doc).
+    pipeline:     ``"sync"`` (default) fetches the LB round's work counters
+                  at the boundary that produced them; ``"async"`` keeps
+                  them as futures and resolves them one interval later, so
+                  adoptions land one LB interval late (the shared
+                  staleness contract — see the module docstring and
+                  ``repro.dist.runtime_api``).
     sponge_width / shape_order: as ``SimConfig`` (defaults match it, so a
                   ``Simulation`` with ``lb_enabled=False`` is the physics
                   reference).
@@ -106,6 +122,7 @@ class BoxRuntime(_StragglerMixin):
         lb_interval: int = 10,
         *,
         halo: int = _MIN_HALO,
+        pipeline: str = "sync",
         policy: str = "knapsack",
         improvement_threshold: float = 0.10,
         max_boxes_per_device: Optional[float] = 1.5,
@@ -134,6 +151,10 @@ class BoxRuntime(_StragglerMixin):
         self.decomp = BoxDecomposition(grid)
         self.devices = list(avail[:n_devices])
         self.halo = halo
+        self.pipeline = validate_pipeline(pipeline)
+        #: deferred LB round under pipeline="async": (work-counter futures,
+        #: box-bytes-relevant counts snapshot, measurement step)
+        self._pending_lb: Optional[Tuple] = None
         self.shape_order = shape_order
         self._capacity_round = capacity_round
         self._capacity_margin = capacity_margin
@@ -399,21 +420,19 @@ class BoxRuntime(_StragglerMixin):
         # 5. particle emigration between boxes (and domain-exit kills)
         self._exchange_particles(stepped)
 
-        # 6. LB round: device-side work counters -> knapsack -> adoption
+        # 6. LB round: device-side work counters -> knapsack -> adoption.
+        #    pipeline="sync" fetches + balances at the measuring boundary;
+        #    pipeline="async" resolves the PREVIOUS round's saved counter
+        #    futures here (one interval stale — the staleness contract)
+        #    and leaves this round's counters in flight.
         adopted = False
         if self.balancer.should_run(self.step_idx):
-            costs = np.asarray(jax.device_get(work_dev), np.float64)
-            self._observe_straggler(costs)
-            old = self.balancer.mapping.copy()
-            new_mapping = self.balancer.step(
-                self.step_idx,
-                costs,
-                box_coords=self.decomp.coords,
-                box_bytes=self.decomp.box_bytes(self._counts),
-            )
-            if new_mapping is not None:
-                adopted = True
-                self._place(np.nonzero(new_mapping != old)[0])
+            if self.pipeline == "async":
+                adopted = self._resolve_pending_lb()
+                self._pending_lb = (work_dev, self._counts.copy(), self.step_idx)
+            else:
+                costs = np.asarray(jax.device_get(work_dev), np.float64)
+                adopted = self._lb_round(costs, self._counts, self.step_idx)
 
         self.step_idx += 1
         self.t += self.grid.dt
@@ -422,6 +441,40 @@ class BoxRuntime(_StragglerMixin):
             "alive": float(self._counts.sum()),
             "adopted": adopted,
         }
+
+    def _lb_round(self, costs: np.ndarray, counts: np.ndarray, step: int) -> bool:
+        """One balancer invocation at measurement boundary ``step`` +
+        adoption placement; shared by the sync path and the deferred
+        (async) resolution."""
+        self._observe_straggler(costs)
+        old = self.balancer.mapping.copy()
+        new_mapping = self.balancer.step(
+            step,
+            costs,
+            box_coords=self.decomp.coords,
+            box_bytes=self.decomp.box_bytes(counts),
+        )
+        if new_mapping is None:
+            return False
+        self._place(np.nonzero(new_mapping != old)[0])
+        return True
+
+    def _resolve_pending_lb(self) -> bool:
+        """Resolve the deferred LB round: fetch the saved counter futures
+        (long since materialized — a full interval ran behind them) and
+        run the balancer on them.  The adoption they trigger lands now,
+        exactly one interval after the measurements."""
+        if self._pending_lb is None:
+            return False
+        work_dev, counts, measured_step = self._pending_lb
+        self._pending_lb = None
+        costs = np.asarray(jax.device_get(work_dev), np.float64)
+        return self._lb_round(costs, counts, measured_step)
+
+    def flush(self) -> None:
+        """Resolve any deferred LB round (``pipeline="async"``) so every
+        measured boundary has fed the balancer; no-op under ``"sync"``."""
+        self._resolve_pending_lb()
 
     def run(self, n_steps: int) -> None:
         """Advance ``n_steps`` steps (LB rounds run when due)."""

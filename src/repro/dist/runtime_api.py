@@ -12,7 +12,23 @@ production runtime).  They share:
   * one **capacity API** — ``update_capacities`` forwards a per-device
     capacity vector into the knapsack;
   * one **straggler loop** — :class:`StragglerLoop` below, fed once per LB
-    interval with the measured per-device (work, time) observations.
+    interval with the measured per-device (work, time) observations;
+  * one **pipeline flag** — ``pipeline="sync"|"async"`` (validated by
+    :func:`validate_pipeline`) selects how the LB interval overlaps host
+    bookkeeping: ``"sync"`` fetches each round's counter history before
+    dispatching the next round (the executable reference, mirroring the
+    ``comm="ring"`` precedent); ``"async"`` double-buffers the interval —
+    round *k+1* is enqueued under the current mapping while round *k*
+    executes, *k*'s history is harvested behind it, and an adopted mapping
+    lands as a slot-permutation correction before round *k+2* (the
+    **staleness contract**: balancer decisions are one interval stale,
+    never wrong — see docs/architecture.md "The async interval pipeline").
+    ``flush`` drains whatever is in flight so every measured round has fed
+    the balancer.  ``ShardedRuntime``'s diagnostics accessors flush
+    implicitly (their histories lag the dispatch frontier);
+    ``BoxRuntime``'s state diagnostics are maintained host-side every step
+    and are always exact — only its deferred balancer round waits for
+    ``flush`` (or the next LB boundary).
 
 ``DistributedPICRuntime`` is a :class:`typing.Protocol`, not a base class:
 the runtimes stay independent (they have genuinely different state
@@ -29,7 +45,26 @@ import numpy as np
 from ..core import LoadBalancer
 from .straggler import StragglerDetector
 
-__all__ = ["DistributedPICRuntime", "StragglerLoop", "device_work"]
+__all__ = [
+    "DistributedPICRuntime",
+    "StragglerLoop",
+    "device_work",
+    "validate_pipeline",
+    "PIPELINES",
+]
+
+#: the two interval-pipeline modes every runtime must accept
+PIPELINES = ("sync", "async")
+
+
+def validate_pipeline(pipeline: str) -> str:
+    """Validate a ``pipeline=`` flag value against :data:`PIPELINES`
+    (shared by every runtime so the error reads the same everywhere)."""
+    if pipeline not in PIPELINES:
+        raise ValueError(
+            f"pipeline must be one of {PIPELINES}, got {pipeline!r}"
+        )
+    return pipeline
 
 
 @runtime_checkable
@@ -37,6 +72,7 @@ class DistributedPICRuntime(Protocol):
     """Common surface of ``BoxRuntime`` and ``ShardedRuntime``."""
 
     balancer: LoadBalancer
+    pipeline: str  # "sync" | "async" (see validate_pipeline)
 
     def step(self) -> dict:
         """Advance one PIC step (running the LB routine when due)."""
@@ -44,6 +80,14 @@ class DistributedPICRuntime(Protocol):
 
     def run(self, n_steps: int) -> None:
         """Advance ``n_steps`` steps."""
+        ...
+
+    def flush(self) -> None:
+        """Drain in-flight interval work (``pipeline="async"`` keeps up to
+        one round's history un-harvested between calls); a no-op under
+        ``pipeline="sync"``.  After ``flush`` every dispatched round's
+        counters have fed the balancer and any resulting adoption has been
+        committed."""
         ...
 
     def apply_mapping(self, new_mapping) -> None:
@@ -100,6 +144,16 @@ class StragglerLoop:
     once balanced; on real heterogeneous hardware, pass ``time_fn`` to
     ``attach_straggler_detector`` to supply per-device busy times from
     device telemetry (tests inject synthetic slow devices this way).
+
+    Pipelining staleness: under ``pipeline="async"`` the observations
+    arrive one interval late (round *k*'s work/time is folded while round
+    *k+1* executes), so the capacity vector the knapsack sees is
+    one-interval stale.  The loop tolerates that by construction — the
+    EWMA already smooths across rounds, capacities are max-normalized (a
+    uniform lag shifts nothing), and the gate bypass fires only on a
+    *straggler-set change*, which a one-round delay postpones but never
+    fabricates.  The same stale-but-never-wrong contract as the async
+    mapping adoption.
     """
 
     def __init__(self, detector: StragglerDetector, balancer: LoadBalancer):

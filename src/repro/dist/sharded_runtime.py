@@ -71,6 +71,29 @@ the directional offset set stays small, and the exchange plan is rebuilt
 from the committed ``slot_box`` — correctness never depends on the repair,
 only the hop count does.  Capacity awareness and the straggler loop ride
 the shared ``repro.dist.runtime_api`` surface, same as ``BoxRuntime``.
+
+Two interval pipelines drive the host loop (``pipeline=``):
+
+``"sync"`` — the reference: dispatch round *k*, fetch its counter
+history, run the balancer, commit any adoption, then dispatch *k+1*.
+The host idles while the round runs; the device idles while the host
+balances.
+
+``"async"`` (double-buffered, via ``repro.pic.engine.IntervalPipeline``)
+— round *k+1* is enqueued **under the current mapping** while round *k*
+executes; *k*'s history is harvested behind the in-flight round (the
+fetch overlaps device compute), the balancer runs on it, and an adopted
+mapping is applied as a slot-permutation *correction* enqueued on the
+in-flight round's output futures — it lands between rounds *k+1* and
+*k+2* instead of stalling between *k* and *k+1*.  The staleness
+contract: a mapping decided from round *k*'s counters takes effect at
+round *k+2*; histories are always interpreted under the dispatch-time
+``slot_box`` (it rides the pipeline as metadata), so physics and
+conservation are identical to ``"sync"`` — only adoption timing shifts
+by one interval.  Still exactly one device→host sync per interval,
+now overlapped; ``flush()`` drains the pipeline and the observability
+accessors flush implicitly (``benchmarks/bench_interval.py`` measures
+the host-idle-fraction and steps/s win).
 """
 from __future__ import annotations
 
@@ -92,7 +115,7 @@ from ..pic.boxes import (
     padded_cell_map,
 )
 from ..pic.deposition import box_work_counters
-from ..pic.engine import field_phase_stacked, particle_phase_stacked
+from ..pic.engine import IntervalPipeline, field_phase_stacked, particle_phase_stacked
 from ..pic.fields import Fields, make_sponge
 from ..pic.grid import Grid2D
 from ..pic.particles import Particles, kinetic_energy
@@ -100,7 +123,7 @@ from ..pic.problem import ProblemSetup
 from ..pic.stepper import Simulation
 from .box_runtime import _MIN_HALO, _np_box_ids, _round_up
 from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather, shard_map
-from .runtime_api import _StragglerMixin
+from .runtime_api import _StragglerMixin, validate_pipeline
 from .sharding import state_shardings
 
 __all__ = ["ShardedRuntime"]
@@ -143,6 +166,16 @@ class ShardedRuntime(_StragglerMixin):
                   destination-aware emigrant packs over directional
                   ``ppermute`` hops; ``"ring"`` is the reference
                   all-gather path (see the module docstring).
+    pipeline:     ``"sync"`` (default) fetches each interval's counter
+                  history before dispatching the next interval — the
+                  executable reference.  ``"async"`` double-buffers the
+                  interval: the next round is enqueued while the previous
+                  one executes, its history is harvested behind it, and an
+                  adopted mapping lands as a slot-permutation correction
+                  one interval late (the staleness contract; see the
+                  module docstring).  Same physics to f32 rounding, same
+                  one sync per interval — the sync is overlapped instead
+                  of serializing the loop.
     layout:       slot curve for ``comm="neighbor"`` —
                   ``"morton"`` (default) or ``"row"``
                   (``repro.pic.boxes.box_slot_layout``).  The initial
@@ -181,6 +214,7 @@ class ShardedRuntime(_StragglerMixin):
         *,
         halo: int = _MIN_HALO,
         comm: str = "neighbor",
+        pipeline: str = "sync",
         layout: str = "morton",
         locality_shift: int = 1,
         policy: str = "knapsack",
@@ -213,6 +247,7 @@ class ShardedRuntime(_StragglerMixin):
         self.decomp = BoxDecomposition(grid)
         self.halo = halo
         self.comm = comm
+        self.pipeline = validate_pipeline(pipeline)
         self.layout = layout
         self.locality_shift = int(locality_shift)
         self.shape_order = shape_order
@@ -302,7 +337,6 @@ class ShardedRuntime(_StragglerMixin):
         )
         self._commit_state(tiles, species)
         self._interval_cache: Dict[Tuple, Callable] = {}
-        self._reorder_fn = None
 
         self.history: Dict[str, List] = {
             "field_energy": [],
@@ -342,17 +376,46 @@ class ShardedRuntime(_StragglerMixin):
     def _commit_state(self, tiles: np.ndarray, species) -> None:
         """Commit slot-major host state to the mesh (initial placement) —
         shardings come from the shared rule table
-        (``repro.dist.sharding.state_shardings``)."""
+        (``repro.dist.sharding.state_shardings``) — and hand ownership of
+        the rotating (tiles, species) buffer chain to the interval
+        pipeline (``repro.pic.engine.IntervalPipeline``): depth 1 for
+        ``pipeline="sync"`` (harvest immediately after dispatch — the
+        reference serial loop), depth 2 for ``"async"`` (one round may
+        stay in flight between ``run`` calls)."""
         state = (
             jnp.asarray(tiles),
             tuple({k: jnp.asarray(v) for k, v in sp.items()} for sp in species),
             jnp.asarray(self._slot_box.astype(np.int32)),
         )
-        self._tiles, self._species, self._slot_box_dev = jax.device_put(
+        tiles_dev, species_dev, self._slot_box_dev = jax.device_put(
             state, state_shardings(state, self.mesh)
+        )
+        self._pipe = IntervalPipeline(
+            (tiles_dev, species_dev), depth=1 if self.pipeline == "sync" else 2
+        )
+        # the adoption permutation, built eagerly while the state is
+        # concrete (applying it later must not barrier the pipeline)
+        shardings = state_shardings((tiles_dev, species_dev), self.mesh)
+        self._reorder_fn = jax.jit(
+            lambda tiles, species, p: jax.tree_util.tree_map(
+                lambda a: a[p], (tiles, species)
+            ),
+            out_shardings=shardings,
         )
         self._commit_slot_tables()
         self.host_dispatches += 1
+
+    @property
+    def _tiles(self):
+        """Tail of the pipeline's buffer chain: the slot-major field tiles
+        the next dispatch consumes (futures while a round is in flight)."""
+        return self._pipe.state[0]
+
+    @property
+    def _species(self):
+        """Tail of the pipeline's buffer chain: the slot-major per-species
+        particle buffers (futures while a round is in flight)."""
+        return self._pipe.state[1]
 
     def _commit_slot_tables(self) -> None:
         """Replicate the host-known slot tables (the inverse mapping the
@@ -465,7 +528,9 @@ class ShardedRuntime(_StragglerMixin):
     def migration_stats(self) -> Dict:
         """Emigrant-pack state: per-species pack capacities (keyed by ring
         offset in neighbour mode), the resize-event log of the adaptive
-        controller, and the overflow count."""
+        controller, and the overflow count.  Flushes the interval pipeline
+        first so every dispatched round's demand has been folded."""
+        self.flush()
         return {
             "comm": self.comm,
             "caps": [dict(d) for d in self._mig_caps],
@@ -474,7 +539,12 @@ class ShardedRuntime(_StragglerMixin):
             "dropped_total": self.dropped_total,
         }
 
-    def _adapt_mig(self, demand: np.ndarray) -> None:
+    def _adapt_mig(
+        self,
+        demand: np.ndarray,
+        keys: Optional[Tuple[int, ...]] = None,
+        step: Optional[int] = None,
+    ) -> None:
         """Resize emigrant packs from one interval's observed demand.
 
         ``demand`` is the fetched per-step demand history: per (species,
@@ -485,10 +555,23 @@ class ShardedRuntime(_StragglerMixin):
         the pack is dropped particles); shrink only after
         ``mig_patience`` consecutive quiet intervals (peak under a
         quarter), with a floor of ``_MIN_MIG``.
+
+        ``keys`` names the pack keys (ring offsets) the history was
+        *dispatched* with — under ``pipeline="async"`` an adoption between
+        dispatch and harvest may have rebuilt the exchange plan, so the
+        demand columns are decoded with the dispatch-time keys and updates
+        to offsets no longer in the plan are discarded (their packs are
+        gone; demand-driven growth re-learns new offsets within one
+        interval).  ``step`` stamps resize events with the measured round's
+        boundary (the same stamp the balancer events use), not the
+        dispatch frontier current at harvest time.
         """
         if not self.adaptive_mig:
             return
-        keys = self._mig_keys()
+        if keys is None:
+            keys = self._mig_keys()
+        if step is None:
+            step = self.step_idx
         for s in range(len(self._mig_caps)):
             if self.comm == "neighbor":
                 # (n_steps, n_sp, n_devices * n_offsets)
@@ -497,6 +580,8 @@ class ShardedRuntime(_StragglerMixin):
             else:
                 peaks = {0: int(demand[:, s, :].max())}
             for o, peak in peaks.items():
+                if o not in self._mig_caps[s]:
+                    continue  # offset left the plan while this round flew
                 cap = self._mig_caps[s][o]
                 idle = self._mig_idle.get((s, o), 0)
                 new = cap
@@ -513,7 +598,7 @@ class ShardedRuntime(_StragglerMixin):
                     self._mig_caps[s][o] = new
                     self.mig_events.append(
                         {
-                            "step": self.step_idx,
+                            "step": step,
                             "species": s,
                             "offset": o,
                             "old": cap,
@@ -887,8 +972,10 @@ class ShardedRuntime(_StragglerMixin):
 
         sp_tiles = P(BOX_AXIS, None, None, None)
         sp_part = P(BOX_AXIS, None)
+        # structure from the host-known species list, not the pipeline tail
+        # (reading the tail would barrier on in-flight dispatches)
         specs_species = tuple(
-            {k: sp_part for k in ("alive",) + _PKEYS} for _ in self._species
+            {k: sp_part for k in ("alive",) + _PKEYS} for _ in self._qm
         )
         sp_hist = P(None, BOX_AXIS)
         specs_ys = {
@@ -924,31 +1011,97 @@ class ShardedRuntime(_StragglerMixin):
             remaining -= chunk
 
     def step(self) -> Dict[str, float]:
-        """Advance a single step (one-step program; prefer :meth:`run`)."""
+        """Advance a single step (one-step program; prefer :meth:`run`).
+        Under ``pipeline="async"`` the returned diagnostics reflect the
+        last *harvested* round (one step behind the dispatch frontier)."""
         self._run_piece(1)
+        lag = 1 if self.pipeline == "sync" else 2
         return {
             "step": self.step_idx,
             "alive": float(self._alive_by_box.sum()),
             "adopted": bool(
-                self.history["lb_steps"] and self.history["lb_steps"][-1] == self.step_idx - 1
+                self.history["lb_steps"]
+                and self.history["lb_steps"][-1] >= self.step_idx - lag
             ),
         }
 
+    def flush(self) -> None:
+        """Drain the interval pipeline: harvest every in-flight round's
+        history (feeding the balancer / straggler loop / pack controller)
+        and commit any resulting adoption.  A no-op when nothing is in
+        flight — ``pipeline="sync"`` harvests inside :meth:`_run_piece`."""
+        while self._pipe.pending:
+            self._harvest_one()
+
+    def pipeline_stats(self) -> Dict:
+        """Interval-pipeline accounting: the mode, rounds currently in
+        flight, rounds harvested, the seconds the host spent *blocked* on
+        device work (``host_blocked_s`` — dispatch + in-flight waits +
+        history fetches; the numerator of the host-idle fraction
+        ``benchmarks/bench_interval.py`` reports) and the host seconds
+        spent with a round in flight (``overlapped_host_s`` — the balancer
+        turnaround ``"async"`` hides behind device compute; ~0 under
+        ``"sync"``)."""
+        return {
+            "pipeline": self.pipeline,
+            "depth": self._pipe.depth,
+            "pending": self._pipe.pending,
+            "harvests": self._pipe.harvests,
+            "host_blocked_s": self._pipe.host_blocked_s,
+            "overlapped_host_s": self._pipe.overlapped_host_s,
+            "host_syncs": self.host_syncs,
+        }
+
     def _run_piece(self, n_steps: int) -> None:
-        lb_due = self.balancer.should_run(self.step_idx)
+        """Dispatch one interval piece under the current mapping, then
+        harvest down to the pipeline's depth: immediately for ``"sync"``
+        (depth 1 — the serial reference), behind one in-flight round for
+        ``"async"`` (depth 2 — the previous round's history is fetched
+        while this piece executes, and any adoption it triggers corrects
+        the in-flight state one interval late)."""
         fn = self._interval_fn(n_steps)
-        self._tiles, self._species, ys = fn(
-            self._tiles,
-            self._species,
+        meta = {
+            "n_steps": n_steps,
+            "step_idx": self.step_idx,
+            "lb_due": self.balancer.should_run(self.step_idx),
+            # histories are slot-ordered under the *dispatch-time* mapping;
+            # the harvester must not read them through a later slot_box
+            "slot_box": self._slot_box.copy(),
+            "mig_keys": self._mig_keys(),
+        }
+
+        def program(state, slot_box_dev, slot_of_dev, t):
+            tiles, species, ys = fn(state[0], state[1], slot_box_dev, slot_of_dev, t)
+            return (tiles, species), ys
+
+        self._pipe.enqueue(
+            program,
             self._slot_box_dev,
             self._slot_of_dev,
             jnp.float32(self.t),
+            meta=meta,
         )
         self.host_dispatches += 1
-        host = jax.device_get(ys)  # the interval's ONLY device->host sync
-        self.host_syncs += 1
+        self.step_idx += n_steps
+        self.t += n_steps * self.grid.dt
+        while self._pipe.pending >= self._pipe.depth:
+            self._harvest_one()
 
-        sb = self._slot_box  # (S,) box id per slot; columns are slot-ordered
+    def _harvest_one(self) -> None:
+        """Fetch the oldest in-flight round's history (the interval's ONLY
+        device->host sync), fold it into the host bookkeeping, and run the
+        balancer if that round opened an LB interval.  An adopted mapping
+        is committed as a slot permutation on the pipeline's *tail* state
+        — under ``"async"`` that is the in-flight round's output, so the
+        correction lands one interval after the measurements it came
+        from."""
+        harvested = self._pipe.harvest()
+        if harvested is None:
+            return
+        host, meta = harvested
+        self.host_syncs += 1
+        n_steps = meta["n_steps"]
+        sb = meta["slot_box"]  # (S,) box per slot at dispatch time
         n_boxes = self.grid.n_boxes
         work_box = np.empty((n_steps, n_boxes))
         work_box[:, sb] = np.asarray(host["work"], np.float64)
@@ -958,7 +1111,11 @@ class ShardedRuntime(_StragglerMixin):
         alive_box[:, sb] = np.asarray(host["alive"], np.float64)
         self._alive_by_box = alive_box[-1]
         self.dropped_total += int(np.asarray(host["dropped"]).sum())
-        self._adapt_mig(np.asarray(host["emig_demand"]))
+        self._adapt_mig(
+            np.asarray(host["emig_demand"]),
+            keys=meta["mig_keys"],
+            step=meta["step_idx"],
+        )
         self.history["field_energy"].extend(
             float(v) for v in np.asarray(host["field_energy"]).sum(axis=1)
         )
@@ -966,13 +1123,12 @@ class ShardedRuntime(_StragglerMixin):
             float(v) for v in np.asarray(host["kinetic_energy"]).sum(axis=1)
         )
 
-        if lb_due:
+        if meta["lb_due"]:
             # row 0 is the round-boundary step — what per-step execution
             # would have fed the balancer
             self._observe_straggler(work_box[0])
-            old = self.balancer.mapping.copy()
             new_mapping = self.balancer.step(
-                self.step_idx,
+                meta["step_idx"],
                 work_box[0],
                 box_coords=self.decomp.coords,
                 box_bytes=self.decomp.box_bytes(counts_box[0]),
@@ -988,11 +1144,8 @@ class ShardedRuntime(_StragglerMixin):
                         max_shift=self.locality_shift,
                     )
                 self.balancer.mapping = new_mapping
-                self.history["lb_steps"].append(self.step_idx)
+                self.history["lb_steps"].append(meta["step_idx"])
                 self._recommit(new_mapping)
-
-        self.step_idx += n_steps
-        self.t += n_steps * self.grid.dt
 
     # ------------------------------------------------------------------
     # adoption: re-commit the sharding as a slot permutation
@@ -1022,7 +1175,10 @@ class ShardedRuntime(_StragglerMixin):
         boxes (use the equal-count knapsack, or repair first).  In
         neighbour mode the exchange plan is rebuilt from the committed
         slots — a low-locality mapping stays correct, it just widens the
-        directional offset set."""
+        directional offset set.  The pipeline is flushed first so the
+        external adoption orders deterministically after every dispatched
+        round."""
+        self.flush()
         new = np.asarray(new_mapping, dtype=np.int64)
         if new.shape != (self.grid.n_boxes,) or new.min() < 0 or new.max() >= self.n_devices:
             raise ValueError("mapping must assign every box to a valid device slot")
@@ -1038,7 +1194,10 @@ class ShardedRuntime(_StragglerMixin):
         """Realize an adopted mapping as a slot permutation, applied on
         device (one gather program, no device->host transfer).  Incoming
         boxes fill freed slots in curve order, keeping slot order aligned
-        with the locality layout."""
+        with the locality layout.  The permutation is enqueued on the
+        pipeline's tail state, so under ``pipeline="async"`` it corrects
+        the in-flight round's output — landing one interval after the
+        counters that motivated it, without a stall."""
         S, bpd = self.grid.n_boxes, self._bpd
         old_slot_of_box = np.empty(S, np.int64)
         old_slot_of_box[self._slot_box] = np.arange(S)
@@ -1061,16 +1220,9 @@ class ShardedRuntime(_StragglerMixin):
         assert (new_slot_box >= 0).all() and len(set(new_slot_box)) == S
         perm = old_slot_of_box[new_slot_box]
 
-        if self._reorder_fn is None:
-            shardings = state_shardings((self._tiles, self._species), self.mesh)
-            self._reorder_fn = jax.jit(
-                lambda tiles, species, p: jax.tree_util.tree_map(
-                    lambda a: a[p], (tiles, species)
-                ),
-                out_shardings=shardings,
-            )
-        self._tiles, self._species = self._reorder_fn(
-            self._tiles, self._species, jnp.asarray(perm)
+        self._pipe.correct(
+            lambda state, p: self._reorder_fn(state[0], state[1], p),
+            jnp.asarray(perm),
         )
         self._slot_box = new_slot_box
         slot_dev = jnp.asarray(new_slot_box.astype(np.int32))
@@ -1111,16 +1263,23 @@ class ShardedRuntime(_StragglerMixin):
     # ------------------------------------------------------------------
     def total_alive(self) -> int:
         """Alive particles across all boxes and species, from the last
-        fetched interval history (no extra device sync)."""
+        fetched interval history (flushes the pipeline so that history is
+        the last *dispatched* round; no extra device sync beyond it)."""
+        self.flush()
         return int(self._alive_by_box.sum())
 
     def box_counts(self) -> np.ndarray:
-        """Alive particles per box (all species), from the last interval."""
+        """Alive particles per box (all species), from the last interval
+        (pipeline flushed first)."""
+        self.flush()
         return self._alive_by_box.copy()
 
     @property
     def fields(self) -> Fields:
-        """Global field state assembled from the sharded slot tiles."""
+        """Global field state assembled from the sharded slot tiles (the
+        pipeline is flushed first so pending adoptions have committed and
+        ``slot_box`` matches the fetched tiles)."""
+        self.flush()
         grid = self.grid
         tiles = np.asarray(jax.device_get(self._tiles))  # (S, 6, bnz, bnx)
         out = np.zeros((6, grid.nz, grid.nx), np.float32)

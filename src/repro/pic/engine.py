@@ -26,15 +26,27 @@ of that contract:
     Per-step counts, work counters and scalar diagnostics come back stacked
     into device-side history buffers of shape ``(n_steps, ...)`` — one
     fetch delivers the whole interval.
+  * :class:`IntervalPipeline` — interval programs as **re-enqueueable
+    closures**: the pipeline owns the rotating state-buffer chain, so the
+    host can enqueue round *k+1* while round *k*'s history is still in
+    flight (jax async dispatch keeps the device saturated) and fetch *k*'s
+    history afterwards, hiding the balancer's host work behind device
+    compute.  Donation stays safe because the pipeline is the only owner
+    of the state futures — round *k*'s donated outputs are consumed
+    exclusively by round *k+1*'s enqueue (the A/B buffer rotation), never
+    by a host fetch racing the in-flight round.
 
 The host-side driver that owns the LoadBalancer / VirtualCluster bookkeeping
-lives in ``repro.pic.stepper``; sharded multi-device stepping
-(``repro.pic.sharded``) and async dispatch are expected to reuse this same
-scanned body.
+lives in ``repro.pic.stepper``; the distributed runtimes (``repro.dist``)
+reuse the same scanned body and drive :class:`IntervalPipeline` behind
+their ``pipeline="sync"|"async"`` flag.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Tuple
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Deque, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +70,7 @@ __all__ = [
     "field_phase_stacked",
     "build_step_body",
     "make_interval_fn",
+    "IntervalPipeline",
 ]
 
 
@@ -310,3 +323,188 @@ def make_interval_fn(step_body: Callable, grid: Grid2D) -> Callable:
         return fields_, species_, outs
 
     return jax.jit(interval, static_argnames=("n_steps",), donate_argnums=(0, 1))
+
+
+class IntervalPipeline:
+    """Interval programs as re-enqueueable closures over a rotating state.
+
+    The serialization the async LB pipeline removes: after dispatching the
+    interval program for round *k*, the host blocks on the history fetch,
+    runs the balancer, commits the next mapping — and only then enqueues
+    round *k+1*, leaving the device idle for the whole host turnaround
+    (and the host idle for the whole device turn).  This class
+    double-buffers that loop: it owns the state-buffer chain (the *only*
+    reference to the donated buffers — that exclusivity is what makes
+    donation safe while a round is in flight), so the driver can
+
+      1. :meth:`enqueue` round *k+1* immediately under the current mapping
+         (the dispatch runs on the pipeline's worker thread, so the driver
+         is not blocked even on backends whose jit dispatch executes
+         synchronously — e.g. multi-device ``shard_map`` programs on
+         XLA:CPU; on accelerators jax's own async dispatch stacks on top),
+      2. :meth:`harvest` round *k*'s stacked history while *k+1* executes
+         (the wait + ``device_get`` accumulate in :attr:`host_blocked_s`),
+      3. apply any resulting state transformation (e.g. the stale-mapping
+         slot permutation) with :meth:`correct` — enqueued behind the
+         in-flight round, so it lands between rounds *k+1* and *k+2*
+         without a stall.
+
+    ``depth`` bounds the rounds in flight: 1 reproduces fully synchronous
+    stepping (inline dispatch, harvest immediately — the executable
+    reference; no worker thread involved), 2 is the double-buffered
+    pipeline.  Per-round metadata (the dispatch-time mapping, step index,
+    whether an LB round is due) rides the queue so the harvester
+    interprets each history under the placement it was *dispatched* with,
+    not the one current at fetch time.
+
+    Accounting: :attr:`host_blocked_s` is every second the driver thread
+    spent waiting on device work (inline dispatch, in-flight waits, the
+    history fetch); :attr:`overlapped_host_s` is the driver-side time
+    spent *between* pipeline calls while a round was in flight — the
+    balancer turnaround the pipeline hides (≈0 under depth 1, the whole
+    LB turn under depth 2).  ``benchmarks/bench_interval.py`` turns both
+    into the sync-vs-async comparison.
+    """
+
+    def __init__(self, state: Any, *, depth: int = 2):
+        if depth < 1:
+            raise ValueError("pipeline depth must be >= 1")
+        self.depth = depth
+        self._state = state
+        self._inflight: Deque[Tuple[Any, Any]] = deque()
+        # all dispatches ride one worker so they execute in enqueue order
+        # and the state chain is only ever touched by one thread at a time
+        self._exec = (
+            ThreadPoolExecutor(max_workers=1, thread_name_prefix="interval-pipeline")
+            if depth > 1
+            else None
+        )
+        #: seconds the driver thread spent blocked on device work
+        self.host_blocked_s = 0.0
+        #: driver-side seconds spent between pipeline calls with a round in
+        #: flight — host work hidden behind device compute
+        self.overlapped_host_s = 0.0
+        #: rounds harvested (each one device->host sync)
+        self.harvests = 0
+        self._resume_t: Optional[float] = None
+        self._correct_err: Optional[BaseException] = None
+
+    # -- overlap accounting: the window between returning control to the
+    # -- driver (with work in flight) and the driver's next pipeline call
+    def _absorb_overlap(self) -> None:
+        if self._resume_t is not None:
+            self.overlapped_host_s += time.perf_counter() - self._resume_t
+            self._resume_t = None
+
+    def _mark_resume(self) -> None:
+        self._resume_t = time.perf_counter() if self._inflight else None
+
+    def _check_correction(self) -> None:
+        """Surface an exception a worker-side :meth:`correct` raised.
+        Corrections cannot block on their own future (that would stall the
+        pipeline behind the in-flight round on synchronous-dispatch
+        backends), so failures are captured on the worker and re-raised at
+        the next pipeline call — before the caller can act on state the
+        correction never produced."""
+        if self._correct_err is not None:
+            err, self._correct_err = self._correct_err, None
+            raise RuntimeError("enqueued pipeline correction failed") from err
+
+    @property
+    def state(self) -> Any:
+        """The tail of the buffer chain: the state the *next* enqueue will
+        consume.  Waits for any in-flight dispatches first (counted in
+        :attr:`host_blocked_s`); prefer :meth:`harvest` for histories."""
+        if self._exec is not None:
+            self._absorb_overlap()
+            t0 = time.perf_counter()
+            self._exec.submit(lambda: None).result()  # barrier: drain dispatches
+            self.host_blocked_s += time.perf_counter() - t0
+            self._check_correction()
+            self._mark_resume()
+        return self._state
+
+    @property
+    def pending(self) -> int:
+        """Rounds enqueued but not yet harvested."""
+        return len(self._inflight)
+
+    @property
+    def full(self) -> bool:
+        """True when another enqueue would exceed ``depth`` rounds in
+        flight (the driver must harvest first)."""
+        return len(self._inflight) >= self.depth
+
+    def _dispatch(self, program: Callable, args: Tuple) -> Any:
+        self._state, history = program(self._state, *args)
+        return history
+
+    def enqueue(self, program: Callable, *args, meta: Any = None) -> None:
+        """Dispatch ``program(state, *args) -> (state', history)`` on the
+        current tail state — inline under depth 1, on the worker thread
+        otherwise (non-blocking for the driver).  The history handle and
+        ``meta`` join the in-flight queue and come back, in dispatch
+        order, from :meth:`harvest`."""
+        if self.full:
+            raise RuntimeError(
+                f"pipeline full ({self.depth} rounds in flight); harvest first"
+            )
+        self._check_correction()
+        self._absorb_overlap()
+        t0 = time.perf_counter()
+        if self._exec is None:
+            history = self._dispatch(program, args)
+        else:
+            history = self._exec.submit(self._dispatch, program, args)
+        self.host_blocked_s += time.perf_counter() - t0
+        self._inflight.append((history, meta))
+        self._mark_resume()
+
+    def correct(self, fn: Callable, *args) -> None:
+        """Replace the tail state with ``fn(state, *args)`` — an enqueued,
+        non-blocking, on-device transformation (the async driver's
+        stale-mapping slot permutation).  Applies after every round already
+        in flight and before anything enqueued later."""
+        if self._exec is None:
+            self._state = fn(self._state, *args)
+        else:
+
+            def apply():
+                try:
+                    self._state = fn(self._state, *args)
+                except BaseException as e:  # surfaced by _check_correction
+                    self._correct_err = e
+
+            self._exec.submit(apply)
+
+    def harvest(self) -> Optional[Tuple[Any, Any]]:
+        """Fetch the oldest in-flight round's history (one device->host
+        sync) and return ``(host_history, meta)``; ``None`` when nothing is
+        in flight.  The wait + fetch accumulate in :attr:`host_blocked_s`
+        — under ``depth >= 2`` the balancer work that follows overlaps the
+        next round's device compute, which is the pipeline's win."""
+        if not self._inflight:
+            return None
+        self._absorb_overlap()
+        history, meta = self._inflight.popleft()
+        t0 = time.perf_counter()
+        if isinstance(history, Future):
+            history = history.result()
+        host = jax.device_get(history)
+        self.host_blocked_s += time.perf_counter() - t0
+        # every task enqueued before this round's dispatch has run by now,
+        # so a failed correction preceding it is visible here
+        self._check_correction()
+        self.harvests += 1
+        self._mark_resume()
+        return host, meta
+
+    def close(self) -> None:
+        """Release the worker thread (after draining any queued
+        dispatches).  Long-lived drivers that build many pipelines should
+        call this — or just drop the last reference; the worker also exits
+        when the pipeline is garbage collected.  The pipeline must not be
+        used after ``close``."""
+        if self._exec is not None:
+            self._exec.shutdown(wait=True)
+            self._exec = None

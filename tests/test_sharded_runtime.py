@@ -17,6 +17,11 @@ multi_device = pytest.mark.skipif(
     reason="needs >=2 devices; run with REPRO_HOST_DEVICES=2 (see conftest)",
 )
 
+eight_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices; run with REPRO_HOST_DEVICES=8 (the CI lane)",
+)
+
 
 def _small_problem(seed=0):
     from repro.pic import laser_ion_problem
@@ -185,6 +190,137 @@ def test_sharded_matches_reference_on_2_devices():
     assert np.abs(f_rt - f_ref).max() <= 1e-5 * max(scale, 1e-30)
     # equal-count invariant held through any adoptions
     assert set(np.bincount(rt.balancer.mapping, minlength=2)) == {rt.grid.n_boxes // 2}
+
+
+# ---------------------------------------------------------------------------
+# the async interval pipeline (pipeline="async")
+# ---------------------------------------------------------------------------
+
+
+def _async_vs_sync(n_devices: int, n_steps: int = 6, lb_interval: int = 2):
+    """Run the same problem under pipeline="sync" and "async"; both must
+    conserve particles, drop nothing, and agree to f32 rounding (adoption
+    *timing* differs by one interval — a placement change, not physics)."""
+    from repro.dist.sharded_runtime import ShardedRuntime
+
+    rts = {}
+    for pipeline in ("sync", "async"):
+        rt = ShardedRuntime(
+            _small_problem(), n_devices=n_devices, lb_interval=lb_interval,
+            pipeline=pipeline,
+        )
+        n0 = rt.total_alive()
+        rt.run(n_steps)
+        rt.flush()
+        assert rt.total_alive() == n0
+        assert rt.dropped_total == 0
+        # the sync-count invariant survives pipelining: one device->host
+        # sync per interval piece, now overlapped instead of serializing
+        assert rt.host_syncs == n_steps // lb_interval
+        rts[pipeline] = rt
+    f_sync = np.stack([np.asarray(c) for c in rts["sync"].fields])
+    f_async = np.stack([np.asarray(c) for c in rts["async"].fields])
+    scale = max(float(np.abs(f_sync).max()), 1e-30)
+    assert np.abs(f_sync - f_async).max() <= 1e-5 * scale
+    np.testing.assert_allclose(
+        rts["async"].history["field_energy"],
+        rts["sync"].history["field_energy"],
+        rtol=1e-4,
+    )
+    return rts
+
+
+def test_async_matches_sync_physics_single_device():
+    _async_vs_sync(n_devices=1)
+
+
+@multi_device
+def test_async_matches_sync_physics_2_devices():
+    _async_vs_sync(n_devices=2)
+
+
+@eight_devices
+def test_async_matches_sync_physics_8_devices():
+    _async_vs_sync(n_devices=8, n_steps=8)
+
+
+def test_async_sync_count_and_dispatches_under_pipelining():
+    """Pipelined intervals keep the structural contract: one program
+    dispatch per round at dispatch time, one device->host sync per round
+    by flush time — with exactly one round's history in flight between
+    run() calls."""
+    from repro.dist.sharded_runtime import ShardedRuntime
+
+    rt = ShardedRuntime(
+        _small_problem(), n_devices=1, lb_interval=3, pipeline="async"
+    )
+    base = rt.host_dispatches
+    rt.run(9)  # three aligned intervals
+    stats = rt.pipeline_stats()
+    assert stats["pending"] == 1  # the double buffer really is in flight
+    assert rt.host_syncs == 2  # last round un-harvested until...
+    rt.flush()
+    assert rt.host_syncs == 3  # ...exactly one sync per interval
+    assert rt.pipeline_stats()["pending"] == 0
+    adoptions = sum(e.adopted for e in rt.balancer.events)
+    assert rt.host_dispatches - base == 3 + 2 * adoptions
+    # flush is idempotent
+    rt.flush()
+    assert rt.host_syncs == 3
+
+
+@multi_device
+def test_async_adoption_lands_exactly_one_interval_late():
+    """The staleness contract: a forced adoption decided from round k's
+    counters is applied after round k+1 was dispatched (so it takes effect
+    at round k+2), where the sync pipeline applies it before k+1 —
+    conservation holding throughout."""
+    from repro.dist.sharded_runtime import ShardedRuntime
+
+    caps = np.array([1.0, 0.25])  # skewed capacities force a new mapping
+    sync = ShardedRuntime(_small_problem(), n_devices=2, lb_interval=2)
+    sync.update_capacities(caps)
+    m0_sync = sync.balancer.mapping.copy()
+    sync.run(2)
+    assert (sync.balancer.mapping != m0_sync).any()  # adopted at the boundary
+
+    rt = ShardedRuntime(
+        _small_problem(), n_devices=2, lb_interval=2, pipeline="async"
+    )
+    n0 = rt.total_alive()
+    rt.update_capacities(caps)
+    m0 = rt.balancer.mapping.copy()
+    rt.run(2)  # round 0 dispatched; its counters still in flight
+    assert (rt.balancer.mapping == m0).all()  # not adopted yet: stale by design
+    rt.run(2)  # round 1 dispatched, round 0 harvested -> adoption lands
+    assert (rt.balancer.mapping != m0).any()
+    assert rt.history["lb_steps"] == [0]  # recorded at its measurement round
+    assert rt.total_alive() == n0  # conservation through the late permutation
+    rt.run(2)
+    assert rt.total_alive() == n0
+    assert rt.dropped_total == 0
+
+
+def test_box_runtime_async_defers_adoption_one_interval():
+    """BoxRuntime implements the same staleness contract host-side: the
+    LB round's counters are resolved (and the adoption placed) one
+    interval later than pipeline="sync"."""
+    from repro.dist.box_runtime import BoxRuntime
+
+    sync = BoxRuntime(_small_problem(), n_devices=1, lb_interval=2)
+    rt = BoxRuntime(_small_problem(), n_devices=1, lb_interval=2, pipeline="async")
+    n0 = rt.total_alive()
+    sync.run(4)
+    rt.run(4)
+    # async has seen one fewer balancer invocation: the last boundary's
+    # counters are still pending...
+    assert len(rt.balancer.events) == len(sync.balancer.events) - 1
+    rt.flush()  # ...until flushed
+    assert len(rt.balancer.events) == len(sync.balancer.events)
+    assert [e.step for e in rt.balancer.events] == [
+        e.step for e in sync.balancer.events
+    ]
+    assert rt.total_alive() == n0
 
 
 # ---------------------------------------------------------------------------

@@ -197,3 +197,97 @@ def test_fused_single_sync_per_round(monkeypatch):
     monkeypatch.setattr("repro.pic.stepper.jax.device_get", counting)
     sim.run(10)  # 2 LB rounds
     assert calls["n"] == 2
+
+# ---------------------------------------------------------------------------
+# IntervalPipeline: the re-enqueueable interval closure (async LB pipeline)
+# ---------------------------------------------------------------------------
+
+
+def _counter_program(state, inc):
+    """Toy interval program: state' = state + inc, history = state'."""
+    import jax.numpy as jnp
+
+    new = state + jnp.float32(inc)
+    return new, new
+
+
+def test_interval_pipeline_depth1_is_the_serial_reference():
+    import jax.numpy as jnp
+
+    from repro.pic.engine import IntervalPipeline
+
+    pipe = IntervalPipeline(jnp.float32(0.0), depth=1)
+    pipe.enqueue(_counter_program, 1.0, meta="a")
+    assert pipe.full  # depth 1: must harvest before the next enqueue
+    host, meta = pipe.harvest()
+    assert (float(host), meta) == (1.0, "a")
+    with pytest.raises(ValueError):
+        IntervalPipeline(jnp.float32(0.0), depth=0)
+
+
+def test_interval_pipeline_rotates_and_orders_rounds():
+    """Two rounds in flight: histories come back in dispatch order, each
+    under its own metadata, and the state chain threads through both."""
+    import jax.numpy as jnp
+
+    from repro.pic.engine import IntervalPipeline
+
+    pipe = IntervalPipeline(jnp.float32(0.0), depth=2)
+    pipe.enqueue(_counter_program, 1.0, meta={"round": 0})
+    pipe.enqueue(_counter_program, 10.0, meta={"round": 1})
+    assert pipe.pending == 2 and pipe.full
+    with pytest.raises(RuntimeError, match="full"):
+        pipe.enqueue(_counter_program, 99.0)
+    h0, m0 = pipe.harvest()
+    h1, m1 = pipe.harvest()
+    assert (float(h0), m0["round"]) == (1.0, 0)
+    assert (float(h1), m1["round"]) == (11.0, 1)
+    assert pipe.harvest() is None
+    assert float(pipe.state) == 11.0
+    assert pipe.harvests == 2
+
+
+def test_interval_pipeline_correct_lands_between_rounds():
+    """correct() (the stale-mapping fix) applies after the in-flight round
+    and before anything enqueued later — the staleness contract's
+    ordering, at the engine layer."""
+    import jax.numpy as jnp
+
+    from repro.pic.engine import IntervalPipeline
+
+    pipe = IntervalPipeline(jnp.float32(0.0), depth=2)
+    pipe.enqueue(_counter_program, 1.0)  # k:   0 -> 1 (in flight)
+    pipe.correct(lambda s: s * 100.0)  # lands on k's output
+    pipe.enqueue(_counter_program, 1.0)  # k+1: 100 -> 101
+    assert float(pipe.harvest()[0]) == 1.0  # k's history: pre-correction
+    assert float(pipe.harvest()[0]) == 101.0  # k+1 saw the corrected state
+    stats_keys = {"host_blocked_s", "overlapped_host_s"}
+    assert all(getattr(pipe, k) >= 0.0 for k in stats_keys)
+
+
+def test_interval_pipeline_surfaces_correction_failures_and_closes():
+    """A correction that fails on the worker must re-raise at a later
+    pipeline call (it cannot block on its own future without stalling the
+    in-flight round), and close() releases the worker thread."""
+    import jax.numpy as jnp
+
+    from repro.pic.engine import IntervalPipeline
+
+    pipe = IntervalPipeline(jnp.float32(0.0), depth=2)
+    pipe.enqueue(_counter_program, 1.0)  # round 0
+
+    def boom(state):
+        raise ValueError("bad permutation")
+
+    pipe.correct(boom)  # queued behind round 0's dispatch
+    pipe.enqueue(_counter_program, 1.0)  # round 1: dispatch runs after boom
+    # the captured failure surfaces at whichever harvest first observes it
+    # (worker progress decides), and by round 1's harvest at the latest —
+    # round 1's dispatch can only complete after boom ran
+    with pytest.raises(RuntimeError, match="correction failed"):
+        pipe.harvest()
+        pipe.harvest()
+    # the failed correction left the state chain untouched (round 1
+    # consumed round 0's output directly)
+    assert float(pipe.state) == 2.0
+    pipe.close()
