@@ -45,6 +45,7 @@ MODULES = [
     "bench_weak_scaling",     # Fig 8
     "bench_moe_dlb",          # paper technique -> MoE expert parallelism
     "bench_elastic",          # fault tolerance / checkpoint (runnability)
+    "bench_recovery",         # checkpoint overhead / restore latency / chaos
     "bench_kernels",          # Pallas kernel microbench (interpret mode)
     "roofline",               # dry-run roofline summary (deliverable g)
 ]

@@ -1,4 +1,16 @@
 """Fault-tolerance substrate: checkpoint/restore."""
-from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint
+from .checkpoint import (
+    CheckpointManager,
+    CorruptCheckpointError,
+    available_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "CorruptCheckpointError",
+    "available_steps",
+    "save_checkpoint",
+    "restore_checkpoint",
+]

@@ -8,7 +8,18 @@ Design for scale (DESIGN.md §5):
     on a real pod each host writes its addressable shards — noted);
   * retention: keep the most recent ``keep`` checkpoints;
   * async: ``save_async`` snapshots to host memory synchronously (consistent
-    cut) and writes in a background thread so the train loop continues.
+    cut) and writes in a background thread so the train loop continues.  A
+    failure inside the worker is recorded and re-raised at the next
+    ``save``/``save_async``/``wait`` (the ``IntervalPipeline.correct()``
+    error-surfacing precedent) — it is never silently swallowed.
+  * torn-write tolerant: ``restore_checkpoint`` with ``step=None`` skips
+    truncated/corrupt checkpoints (a torn write that survived the atomic
+    rename, e.g. media corruption) and falls back to the newest *valid*
+    step with a warning.
+  * template-free: the manifest records each leaf's tree path as structured
+    steps, so ``restore_checkpoint(dir, tree_like=None)`` can rebuild a
+    dict/list pytree without a template — the shape of a recovery restore,
+    where the surviving process has no same-shaped tree to offer.
 
 Restore is exact: dtypes/shapes/values round-trip bit-for-bit (tests).
 """
@@ -20,16 +31,30 @@ import shutil
 import tempfile
 import threading
 import time
+import warnings
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "available_steps",
+    "CheckpointManager",
+    "CorruptCheckpointError",
+]
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint's on-disk bytes are unreadable (torn write, truncated
+    container, unparseable manifest).  Distinct from template/shape
+    mismatches, which mean the *caller's* tree is wrong — only corruption
+    triggers the fall-back-to-older-step path."""
 
 
 def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -38,15 +63,67 @@ def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
     return named, treedef
 
 
+def _path_steps(path) -> Optional[List[Dict]]:
+    """Serialize a tree path as JSON-able steps: ``{"k": key}`` for a dict
+    hop, ``{"i": index}`` for a sequence hop.  Returns ``None`` for paths
+    through containers the template-free restore cannot rebuild (custom
+    pytree nodes) — those checkpoints still restore with a template."""
+    steps: List[Dict] = []
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey):
+            key = entry.key
+            if not isinstance(key, (str, int, bool)):
+                return None
+            steps.append({"k": key})
+        elif isinstance(entry, (jax.tree_util.SequenceKey,)):
+            steps.append({"i": int(entry.idx)})
+        else:
+            return None
+    return steps
+
+
+def _tree_from_paths(entries: List[Dict], leaves: List[np.ndarray]):
+    """Rebuild a nested dict/list pytree from per-leaf path steps.  Tuples
+    were flattened as sequences, so they come back as lists."""
+    if any(e.get("steps") is None for e in entries):
+        raise ValueError(
+            "checkpoint contains custom pytree nodes; pass tree_like to restore"
+        )
+    if len(entries) == 1 and not entries[0]["steps"]:
+        return leaves[0]
+    root: Any = {} if "k" in entries[0]["steps"][0] else []
+    for entry, leaf in zip(entries, leaves):
+        node = root
+        steps = entry["steps"]
+        for j, s in enumerate(steps):
+            last = j == len(steps) - 1
+            child = leaf if last else ({} if "k" in steps[j + 1] else [])
+            if "k" in s:
+                if last:
+                    node[s["k"]] = leaf
+                else:
+                    node = node.setdefault(s["k"], child)
+            else:
+                # flatten order fills sequences left-to-right, so a new
+                # index is always exactly one past the end
+                if s["i"] == len(node):
+                    node.append(child)
+                elif last:
+                    node[s["i"]] = leaf
+                if not last:
+                    node = node[s["i"]]
+    return root
+
+
 def save_checkpoint(directory: os.PathLike, tree, step: int, extra: Optional[Dict] = None) -> Path:
     """Atomically write one checkpoint; returns its final path."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:010d}"
-    named, _ = _flatten_with_paths(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     # store raw bytes: npz cannot represent extended dtypes (bfloat16);
     # dtype/shape live in the manifest and are reconstructed exactly
-    raw = [np.asarray(leaf) for _, leaf in named]
+    raw = [np.asarray(leaf) for _, leaf in flat]
     arrays = {
         f"leaf_{i}": np.frombuffer(a.tobytes(), np.uint8) for i, a in enumerate(raw)
     }
@@ -55,8 +132,14 @@ def save_checkpoint(directory: os.PathLike, tree, step: int, extra: Optional[Dic
         "time": time.time(),
         "extra": extra or {},
         "leaves": [
-            {"key": f"leaf_{i}", "path": name, "dtype": str(a.dtype), "shape": list(a.shape)}
-            for i, ((name, _), a) in enumerate(zip(named, raw))
+            {
+                "key": f"leaf_{i}",
+                "path": jax.tree_util.keystr(path),
+                "steps": _path_steps(path),
+                "dtype": str(a.dtype),
+                "shape": list(a.shape),
+            }
+            for i, ((path, _), a) in enumerate(zip(flat, raw))
         ],
     }
     tmp = Path(tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_"))
@@ -78,80 +161,153 @@ def save_checkpoint(directory: os.PathLike, tree, step: int, extra: Optional[Dic
     return final
 
 
-def restore_checkpoint(directory: os.PathLike, tree_like, step: Optional[int] = None):
-    """Restore into the structure of ``tree_like``.  Returns (tree, step)."""
+def _load_step(path: Path, tree_like):
+    """Load one checkpoint directory.  Raises :class:`CorruptCheckpointError`
+    on unreadable bytes (truncated npz, unparseable manifest, byte-count
+    mismatch); template validation errors propagate as ``ValueError``."""
+    import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+
+    try:
+        manifest = json.loads((path / _MANIFEST).read_text())
+        with np.load(path / _ARRAYS) as data:
+            leaves = [
+                np.frombuffer(
+                    data[e["key"]].tobytes(), dtype=np.dtype(e["dtype"])
+                ).reshape(e["shape"])
+                for e in manifest["leaves"]
+            ]
+    except Exception as e:
+        raise CorruptCheckpointError(f"{path.name}: {type(e).__name__}: {e}") from e
+    if tree_like is None:
+        restored = _tree_from_paths(manifest["leaves"], leaves)
+    else:
+        named, treedef = _flatten_with_paths(tree_like)
+        if len(named) != len(leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves but target tree has {len(named)}"
+            )
+        for (name, target), loaded, entry in zip(named, leaves, manifest["leaves"]):
+            if entry["path"] != name:
+                raise ValueError(f"leaf order mismatch: {entry['path']} vs {name}")
+            if tuple(loaded.shape) != tuple(np.shape(target)):
+                raise ValueError(
+                    f"shape mismatch at {name}: {loaded.shape} vs {np.shape(target)}"
+                )
+        restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    return restored, manifest["step"]
+
+
+def restore_checkpoint(directory: os.PathLike, tree_like=None, step: Optional[int] = None):
+    """Restore a checkpoint; returns ``(tree, step)``.
+
+    With ``tree_like`` given, the stored leaves are validated against the
+    template's structure and shapes and unflattened into it.  With
+    ``tree_like=None`` the pytree is rebuilt from the manifest's recorded
+    paths (dict/list containers; tuples come back as lists) — no template
+    needed, which is what a recovery restore after device loss requires.
+
+    With ``step=None`` the newest checkpoint is used; if it is truncated or
+    corrupt (torn write), it is skipped with a warning and the next-newest
+    *valid* step is restored instead.  An explicitly requested ``step``
+    propagates its corruption error — the caller asked for that one.
+    """
     directory = Path(directory)
     steps = available_steps(directory)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {directory}")
-    step = steps[-1] if step is None else step
-    path = directory / f"step_{step:010d}"
-    manifest = json.loads((path / _MANIFEST).read_text())
-    import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
-
-    with np.load(path / _ARRAYS) as data:
-        leaves = [
-            np.frombuffer(data[e["key"]].tobytes(), dtype=np.dtype(e["dtype"])).reshape(
-                e["shape"]
-            )
-            for e in manifest["leaves"]
-        ]
-    named, treedef = _flatten_with_paths(tree_like)
-    if len(named) != len(leaves):
-        raise ValueError(
-            f"checkpoint has {len(leaves)} leaves but target tree has {len(named)}"
-        )
-    for (name, target), loaded, entry in zip(named, leaves, manifest["leaves"]):
-        if entry["path"] != name:
-            raise ValueError(f"leaf order mismatch: {entry['path']} vs {name}")
-        if tuple(loaded.shape) != tuple(np.shape(target)):
-            raise ValueError(f"shape mismatch at {name}: {loaded.shape} vs {np.shape(target)}")
-    restored = jax.tree_util.tree_unflatten(treedef, leaves)
-    return restored, manifest["step"]
+    if step is not None:
+        if step not in steps:
+            raise FileNotFoundError(f"no checkpoint for step {step} under {directory}")
+        return _load_step(directory / f"step_{step:010d}", tree_like)
+    last_err: Optional[BaseException] = None
+    for cand in reversed(steps):
+        path = directory / f"step_{cand:010d}"
+        try:
+            return _load_step(path, tree_like)
+        except CorruptCheckpointError as e:  # torn — fall back to an older step
+            last_err = e
+            warnings.warn(f"skipping corrupt checkpoint: {e}")
+    raise FileNotFoundError(
+        f"no valid checkpoint under {directory} ({len(steps)} corrupt)"
+    ) from last_err
 
 
 def available_steps(directory: os.PathLike) -> List[int]:
+    """Sorted step numbers of the complete checkpoints under ``directory``.
+    Tolerates concurrent deletion (retention GC racing a reader) and stray
+    non-checkpoint entries."""
     directory = Path(directory)
-    if not directory.exists():
-        return []
     out = []
-    for p in directory.iterdir():
-        if p.name.startswith("step_") and (p / _MANIFEST).exists():
-            out.append(int(p.name.split("_")[1]))
+    try:
+        entries = list(directory.iterdir())
+    except FileNotFoundError:
+        return []
+    for p in entries:
+        if not p.name.startswith("step_"):
+            continue
+        try:
+            step = int(p.name.split("_", 1)[1])
+        except ValueError:
+            continue
+        if (p / _MANIFEST).exists():
+            out.append(step)
     return sorted(out)
 
 
 class CheckpointManager:
-    """Retention + async save on top of save/restore."""
+    """Retention + async save on top of save/restore.
 
-    def __init__(self, directory: os.PathLike, keep: int = 3):
+    ``on_write`` (optional) is invoked with the step number inside the
+    writer just before each write — a telemetry/fault-injection seam; an
+    exception it raises follows the same surfacing path as a real I/O
+    failure (sync ``save`` propagates it, ``save_async`` records it and
+    re-raises at the next ``save``/``save_async``/``wait``).
+    """
+
+    def __init__(
+        self,
+        directory: os.PathLike,
+        keep: int = 3,
+        *,
+        on_write: Optional[Callable[[int], None]] = None,
+    ):
         self.directory = Path(directory)
         self.keep = keep
+        self.on_write = on_write
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
     def save(self, tree, step: int, extra: Optional[Dict] = None) -> Path:
+        """Synchronous checkpoint write + retention GC.  Surfaces any
+        failure recorded by a previous ``save_async`` first."""
+        self.wait()
+        if self.on_write is not None:
+            self.on_write(step)
         path = save_checkpoint(self.directory, tree, step, extra)
         self._gc()
         return path
 
     def save_async(self, tree, step: int, extra: Optional[Dict] = None) -> None:
         """Snapshot synchronously (device->host copy = consistent cut), write
-        in the background."""
+        in the background.  Joins the previous write first, re-raising its
+        failure here if it had one."""
         self.wait()  # one outstanding write at a time
         snapshot = jax.tree.map(lambda x: np.asarray(x), tree)
 
         def work():
             try:
+                if self.on_write is not None:
+                    self.on_write(step)
                 save_checkpoint(self.directory, snapshot, step, extra)
                 self._gc()
-            except BaseException as e:  # surfaced on next wait()
+            except BaseException as e:  # surfaced on next save/save_async/wait
                 self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight async write; re-raise its failure if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -159,15 +315,26 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def restore(self, tree_like, step: Optional[int] = None):
-        self.wait()
+    def restore(self, tree_like=None, step: Optional[int] = None):
+        """Restore through :func:`restore_checkpoint` (template optional).
+        Drains any in-flight async write first; a recorded write failure is
+        downgraded to a warning — it must not block a recovery restore."""
+        try:
+            self.wait()
+        except Exception as e:
+            warnings.warn(f"pending async checkpoint write had failed: {e}")
         return restore_checkpoint(self.directory, tree_like, step)
 
     def latest_step(self) -> Optional[int]:
+        """Newest complete step number, or ``None`` when there is none."""
         steps = available_steps(self.directory)
         return steps[-1] if steps else None
 
     def _gc(self) -> None:
         steps = available_steps(self.directory)
+        if self.keep <= 0:
+            return
         for old in steps[: -self.keep]:
+            # ignore_errors: another process (or a racing GC) may have
+            # deleted it already — retention is best-effort by design
             shutil.rmtree(self.directory / f"step_{old:010d}", ignore_errors=True)

@@ -25,6 +25,15 @@ data flow of one LB round, is in ``docs/architecture.md``):
     (the ``comm="ring"`` reference), and the ``shard_map`` version shim.
   * ``elastic`` — ``ElasticRunner`` / ``DeviceSet``: device failure and
     scale-up mid-run; balancer resize with a one-shot gate bypass.
+  * ``recovery`` — ``RecoveryRunner``: interval-consistent checkpointing
+    (async save off the hot path via ``repro.ckpt.CheckpointManager``)
+    plus the recovery protocol — restore the last committed checkpoint,
+    re-knapsack onto the survivors, retry/backoff and a degradation
+    ladder instead of aborting.
+  * ``faults`` — seeded, reproducible fault injection (``Fault`` /
+    ``FaultSchedule`` / ``FaultInjector``) for the chaos suite: device
+    loss, checkpoint-writer exceptions, NaN counter history, straggler
+    spikes, torn checkpoint writes.
   * ``straggler`` — ``StragglerDetector``: EWMA work/time throughput ->
     capacity vector for the capacity-aware knapsack.
   * ``sharding`` — logical-axis -> mesh-axis rules (``default_rules`` /
@@ -35,7 +44,22 @@ data flow of one LB round, is in ``docs/architecture.md``):
 from .box_runtime import BoxRuntime
 from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather
 from .elastic import DeviceSet, ElasticRunner
-from .runtime_api import DistributedPICRuntime, StragglerLoop, validate_pipeline
+from .faults import (
+    CorruptState,
+    DeviceLoss,
+    Fault,
+    FaultInjector,
+    FaultSchedule,
+    TransientFault,
+)
+from .recovery import RecoveryError, RecoveryRunner
+from .runtime_api import (
+    DistributedPICRuntime,
+    StragglerLoop,
+    restore_balancer,
+    snapshot_balancer,
+    validate_pipeline,
+)
 from .sharded_runtime import ShardedRuntime
 from .sharding import (
     batch_sharding,
@@ -55,8 +79,18 @@ __all__ = [
     "DeviceSet",
     "ElasticRunner",
     "StragglerDetector",
+    "CorruptState",
+    "DeviceLoss",
+    "Fault",
+    "FaultInjector",
+    "FaultSchedule",
+    "RecoveryError",
+    "RecoveryRunner",
+    "TransientFault",
     "batch_sharding",
     "default_rules",
+    "restore_balancer",
+    "snapshot_balancer",
     "neighbor_exchange",
     "neighbor_reduce",
     "ring_all_gather",

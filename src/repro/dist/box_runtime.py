@@ -72,7 +72,12 @@ from ..pic.fields import Fields, make_sponge
 from ..pic.grid import Grid2D
 from ..pic.particles import Particles
 from ..pic.problem import ProblemSetup
-from .runtime_api import _StragglerMixin, validate_pipeline
+from .runtime_api import (
+    _StragglerMixin,
+    restore_balancer,
+    snapshot_balancer,
+    validate_pipeline,
+)
 
 __all__ = ["BoxRuntime"]
 
@@ -351,20 +356,18 @@ class BoxRuntime(_StragglerMixin):
             )
         self._pack_boxes(pooled)
 
-    def _exchange_particles(self, stepped: List[Tuple[Particles, ...]]) -> None:
-        """Emigration: pool each species across boxes (dropping particles the
-        push killed at the domain boundary) and repack by current position;
-        ``_pack_boxes`` commits each rebuilt buffer to its owner device.
-        Boxes whose membership is unchanged still get a fresh buffer; the
-        repack is O(total particles) on the host, once per step.  Field
-        tiles and static tiles are NOT touched here — they move only on
-        adoption."""
+    def _pool_species(self, boxes: List[Tuple[Particles, ...]]) -> List[Dict[str, np.ndarray]]:
+        """Pool each species' alive particles across per-box buffers into
+        flat host arrays (domain-global coordinates) — the repack input of
+        the emigration exchange, and the particle payload of
+        :meth:`snapshot` (box membership is implied by position, so the
+        pooled form is device-count independent)."""
         n_species = len(self._species_template)
         pooled = []
         for s in range(n_species):
             zs, xs, uxs, uys, uzs, ws = [], [], [], [], [], []
             for b in range(self.grid.n_boxes):
-                p = stepped[b][s]
+                p = boxes[b][s]
                 host = jax.device_get((p.z, p.x, p.ux, p.uy, p.uz, p.w, p.alive))
                 z, x, ux, uy, uz, w, alive = (np.asarray(a) for a in host)
                 zs.append(z[alive]); xs.append(x[alive]); uxs.append(ux[alive])
@@ -374,7 +377,17 @@ class BoxRuntime(_StragglerMixin):
                  "ux": np.concatenate(uxs), "uy": np.concatenate(uys),
                  "uz": np.concatenate(uzs), "w": np.concatenate(ws)}
             )
-        self._pack_boxes(pooled)
+        return pooled
+
+    def _exchange_particles(self, stepped: List[Tuple[Particles, ...]]) -> None:
+        """Emigration: pool each species across boxes (dropping particles the
+        push killed at the domain boundary) and repack by current position;
+        ``_pack_boxes`` commits each rebuilt buffer to its owner device.
+        Boxes whose membership is unchanged still get a fresh buffer; the
+        repack is O(total particles) on the host, once per step.  Field
+        tiles and static tiles are NOT touched here — they move only on
+        adoption."""
+        self._pack_boxes(self._pool_species(stepped))
 
     # ------------------------------------------------------------------
     # stepping
@@ -516,3 +529,73 @@ class BoxRuntime(_StragglerMixin):
     def devices_in_use(self) -> List[int]:
         """Distinct device ids currently holding box state."""
         return sorted({self.device_of(b).id for b in range(self.grid.n_boxes)})
+
+    # ------------------------------------------------------------------
+    # recovery surface (see repro.dist.recovery)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Minimal recoverable state at the last committed boundary, as a
+        host pytree of numpy leaves in box-major layout: stacked interior
+        field tiles, pooled alive particles per species, per-box counts,
+        sim time/step, the committed mapping, balancer EWMA state.  Flushes
+        the deferred LB round first, so the cut is a committed one."""
+        self.flush()
+        grid = self.grid
+        tiles = np.stack(
+            [np.asarray(jax.device_get(t), np.float32) for t in self.field_tiles]
+        )
+        snap: Dict = {
+            "tiles": tiles,
+            "species": self._pool_species(self.boxes),
+            "counts": self._counts.copy(),
+            "t": np.float64(self.t),
+            "step_idx": np.int64(self.step_idx),
+            "mapping": np.asarray(self.balancer.mapping, np.int64).copy(),
+            "n_devices": np.int64(len(self.devices)),
+        }
+        snap.update(snapshot_balancer(self.balancer))
+        rng = getattr(self, "rng_key", None)
+        if rng is not None:
+            snap["rng_key"] = np.asarray(jax.device_get(rng))
+        return snap
+
+    def restore(self, snap: Dict) -> None:
+        """Adopt a :meth:`snapshot` — possibly taken on a different device
+        count.  The checkpointed per-box populations are re-knapsacked onto
+        *this* runtime's device set (gate bypassed, capacity-aware) and the
+        rebuilt mapping is committed before state is re-placed, so the
+        restore is itself a redistribution event."""
+        grid = self.grid
+        tiles = np.asarray(snap["tiles"], np.float32)
+        if tiles.shape != (grid.n_boxes, 6, grid.box_nz, grid.box_nx):
+            raise ValueError(
+                f"snapshot tiles {tiles.shape} do not fit this grid "
+                f"({grid.n_boxes} boxes of 6x{grid.box_nz}x{grid.box_nx})"
+            )
+        if len(snap["species"]) != len(self._species_template):
+            raise ValueError("snapshot species count does not match this problem")
+        # drop the deferred LB round *before* flushing: its captured costs
+        # may be poisoned (NaN counter history is one of the faults a
+        # restore repairs) and the restore re-knapsacks anyway
+        self._pending_lb = None
+        self.flush()
+        self._pending_lb = None
+        restore_balancer(self.balancer, snap, n_boxes=grid.n_boxes)
+        # re-knapsack the checkpointed populations onto THIS device set
+        counts = np.nan_to_num(np.asarray(snap["counts"], np.float64), nan=0.0)
+        mapping = self.balancer.propose(
+            np.maximum(counts, 0.0), box_coords=self.decomp.coords
+        )
+        self.balancer.mapping = np.asarray(mapping, np.int64)
+        self.balancer.force_rebalance()
+        self.field_tiles = [jnp.asarray(tiles[b]) for b in range(grid.n_boxes)]
+        pooled = [
+            {k: np.asarray(sp[k], np.float32) for k in ("z", "x", "ux", "uy", "uz", "w")}
+            for sp in snap["species"]
+        ]
+        self._pack_boxes(pooled)
+        self._place(range(grid.n_boxes))
+        self.t = float(snap["t"])
+        self.step_idx = int(snap["step_idx"])
+        if "rng_key" in snap:
+            self.rng_key = jnp.asarray(snap["rng_key"])

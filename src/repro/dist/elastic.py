@@ -111,11 +111,21 @@ class ElasticRunner:
     def fail_device(self, slot: int) -> None:
         """A device died: shrink the balancer onto the surviving slots.
         Boxes stranded on the dead slot are folded back round-robin by
-        ``LoadBalancer.resize`` and the next LB round bypasses the gate."""
+        ``LoadBalancer.resize`` and the next LB round bypasses the gate.
+        Failing the *last* device is rejected (``DeviceSet``'s guard): the
+        error propagates and a ``terminal`` event is logged so the abort
+        is visible in the same event stream as ``fail``/``adopt``."""
         n = self.lb.n_devices
         if not 0 <= slot < n:
             raise ValueError(f"slot must be in [0, {n}), got {slot}")
-        self.devices.fail(self.slot_ids[slot])  # raises on the last device
+        try:
+            self.devices.fail(self.slot_ids[slot])  # raises on the last device
+        except RuntimeError as e:
+            self.events.append(
+                {"step": None, "kind": "terminal", "slot": int(slot),
+                 "n_devices": self.lb.n_devices, "error": str(e)}
+            )
+            raise
         last = n - 1
         if slot != last and self.lb.mapping is not None:
             m = self.lb.mapping.copy()

@@ -50,6 +50,8 @@ __all__ = [
     "StragglerLoop",
     "device_work",
     "validate_pipeline",
+    "snapshot_balancer",
+    "restore_balancer",
     "PIPELINES",
 ]
 
@@ -119,12 +121,67 @@ class DistributedPICRuntime(Protocol):
         """Distinct device ids currently holding box state."""
         ...
 
+    def snapshot(self) -> dict:
+        """Minimal recoverable state at the last committed interval
+        boundary, as a host pytree of numpy leaves: field tiles and pooled
+        alive particles in **box-major** layout (device-count independent),
+        per-box counts, sim time/step, the committed slot→box mapping,
+        balancer EWMA state, and runtime-specific extras (adaptive
+        ``mig_cap`` tables).  Flushes first, so an async in-flight round is
+        never captured — the snapshot *is* the commit point."""
+        ...
+
+    def restore(self, snap: dict) -> None:
+        """Adopt a :meth:`snapshot` — possibly taken on a different device
+        count.  The checkpointed per-box populations are re-knapsacked onto
+        *this* runtime's device set (gate bypassed, capacity-aware,
+        locality-repaired where the comm mode wants it) and state is
+        re-committed under the new mapping."""
+        ...
+
 
 def device_work(work_per_box: np.ndarray, mapping: np.ndarray, n_devices: int) -> np.ndarray:
     """Sum per-box executed-work counters onto their owner devices."""
     out = np.zeros(n_devices, np.float64)
     np.add.at(out, np.asarray(mapping), np.asarray(work_per_box, np.float64))
     return out
+
+
+def snapshot_balancer(balancer: LoadBalancer) -> dict:
+    """Checkpointable balancer state shared by both runtimes: the EWMA
+    capacity vector (absent when no straggler loop has fed one) and the
+    smoothed per-box cost state (absent before the first LB round).  Both
+    are optional in the snapshot; :func:`restore_balancer` restores what
+    still fits."""
+    out = {}
+    if balancer.capacities is not None:
+        out["capacities"] = np.asarray(balancer.capacities, np.float64).copy()
+    state = balancer._smoother._state
+    if state is not None:
+        out["cost_ema"] = np.asarray(state, np.float64).copy()
+    return out
+
+
+def restore_balancer(balancer: LoadBalancer, snap: dict, *, n_boxes: int) -> None:
+    """Restore :func:`snapshot_balancer` state into a balancer that may
+    govern a *different* device count than the snapshot's: capacities only
+    transfer when the length matches (a shrunken mesh re-learns them from
+    the straggler loop), the smoothed costs always (they are per-box).
+    Non-finite snapshot values are dropped rather than restored — a
+    checkpoint must never re-poison a recovered runtime.  The live
+    smoothed-cost state is reset unconditionally first, so a poisoned
+    in-memory EWMA cannot survive the restore either."""
+    balancer._smoother._state = None
+    caps = snap.get("capacities")
+    if caps is not None:
+        caps = np.asarray(caps, np.float64)
+        if caps.shape == (balancer.n_devices,) and np.isfinite(caps).all() and (caps > 0).all():
+            balancer.set_capacities(caps)
+    ema = snap.get("cost_ema")
+    if ema is not None:
+        ema = np.asarray(ema, np.float64)
+        if ema.shape == (n_boxes,) and np.isfinite(ema).all():
+            balancer._smoother._state = ema.copy()
 
 
 class StragglerLoop:

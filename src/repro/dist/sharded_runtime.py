@@ -123,7 +123,12 @@ from ..pic.problem import ProblemSetup
 from ..pic.stepper import Simulation
 from .box_runtime import _MIN_HALO, _np_box_ids, _round_up
 from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather, shard_map
-from .runtime_api import _StragglerMixin, validate_pipeline
+from .runtime_api import (
+    _StragglerMixin,
+    restore_balancer,
+    snapshot_balancer,
+    validate_pipeline,
+)
 from .sharding import state_shardings
 
 __all__ = ["ShardedRuntime"]
@@ -329,14 +334,14 @@ class ShardedRuntime(_StragglerMixin):
         self._offsets: Tuple[int, ...] = ()
         self._pair_caps: Dict[int, int] = {}
         self._build_comm_plan()
+        self._capacity_margin = float(capacity_margin)
+        self._capacity_round = int(capacity_round)
         self._caps: List[int] = []
         self._mig_caps: List[Dict[int, int]] = []
         self._mig_idle: Dict[Tuple[int, int], int] = {}
-        tiles, species = self._pack_initial(
-            problem.species, capacity_margin, capacity_round, mig_cap
-        )
-        self._commit_state(tiles, species)
         self._interval_cache: Dict[Tuple, Callable] = {}
+        tiles, species = self._pack_initial(problem.species, mig_cap)
+        self._commit_state(tiles, species)
 
         self.history: Dict[str, List] = {
             "field_energy": [],
@@ -390,9 +395,16 @@ class ShardedRuntime(_StragglerMixin):
         tiles_dev, species_dev, self._slot_box_dev = jax.device_put(
             state, state_shardings(state, self.mesh)
         )
-        self._pipe = IntervalPipeline(
-            (tiles_dev, species_dev), depth=1 if self.pipeline == "sync" else 2
-        )
+        pipe = getattr(self, "_pipe", None)
+        if pipe is not None:
+            # re-commit into the existing pipeline (a checkpoint restore):
+            # drain whatever is still in flight, then swap the chain
+            pipe.drain()
+            pipe.reset((tiles_dev, species_dev))
+        else:
+            self._pipe = IntervalPipeline(
+                (tiles_dev, species_dev), depth=1 if self.pipeline == "sync" else 2
+            )
         # the adoption permutation, built eagerly while the state is
         # concrete (applying it later must not barrier the pipeline)
         shardings = state_shardings((tiles_dev, species_dev), self.mesh)
@@ -610,29 +622,36 @@ class ShardedRuntime(_StragglerMixin):
     # ------------------------------------------------------------------
     # initial particle packing (slot-major, fixed capacity)
     # ------------------------------------------------------------------
-    def _pack_initial(self, species, margin, quantum, mig_cap):
+    def _pack_pooled(self, pooled: List[Dict[str, np.ndarray]]) -> List[Dict[str, np.ndarray]]:
+        """Bin per-species pooled alive particles (flat host arrays with
+        domain-global positions) into slot-major fixed-capacity buffers
+        under the committed ``slot_box``.  Grows ``self._caps`` when a box
+        population no longer fits a species buffer — and clears the
+        interval-program cache then, since the capacities are baked into
+        the compiled closures.  Used for the initial packing and for a
+        checkpoint restore (whose pooled form is device-count independent).
+        """
         grid, S = self.grid, self.grid.n_boxes
         box_of_slot = self._slot_box
         slot_of_box = np.empty(S, np.int64)
         slot_of_box[box_of_slot] = np.arange(S)
         self._alive_by_box = np.zeros(S, np.float64)
-        packed = []
-        for tpl in species:
-            host = jax.device_get((tpl.z, tpl.x, tpl.ux, tpl.uy, tpl.uz, tpl.w, tpl.alive))
-            z, x, ux, uy, uz, w, alive = (np.asarray(a) for a in host)
-            keep = alive
-            pool = {
-                "z": z[keep], "x": x[keep], "ux": ux[keep],
-                "uy": uy[keep], "uz": uz[keep], "w": w[keep],
-            }
+        packed, grew = [], False
+        for s_idx, pool in enumerate(pooled):
             ids = _np_box_ids(pool["z"], pool["x"], grid)
             order = np.argsort(ids, kind="stable")
             bounds = np.searchsorted(ids[order], np.arange(S + 1))
             counts = np.diff(bounds)
-            cap = _round_up(int(counts.max() * margin) if len(ids) else 0, quantum)
-            self._caps.append(cap)
-            base = int(mig_cap) if mig_cap is not None else max(_MIN_MIG, cap // 8)
-            self._mig_caps.append(self._init_mig_caps(base))
+            peak = int(counts.max()) if len(ids) else 0
+            need = _round_up(
+                int(peak * self._capacity_margin), self._capacity_round
+            )
+            if s_idx >= len(self._caps):
+                self._caps.append(need)
+            elif peak > self._caps[s_idx]:
+                self._caps[s_idx] = max(need, _round_up(peak, self._capacity_round))
+                grew = True
+            cap = self._caps[s_idx]
             buf = {
                 "z": np.empty((S, cap), np.float32),
                 "x": np.empty((S, cap), np.float32),
@@ -653,6 +672,27 @@ class ShardedRuntime(_StragglerMixin):
                 buf["alive"][s, :n] = True
                 self._alive_by_box[b] += n
             packed.append(buf)
+        if grew:
+            self._interval_cache.clear()
+        return packed
+
+    def _pack_initial(self, species, mig_cap):
+        grid, S = self.grid, self.grid.n_boxes
+        pooled = []
+        for tpl in species:
+            host = jax.device_get((tpl.z, tpl.x, tpl.ux, tpl.uy, tpl.uz, tpl.w, tpl.alive))
+            z, x, ux, uy, uz, w, alive = (np.asarray(a) for a in host)
+            keep = alive
+            pooled.append(
+                {
+                    "z": z[keep], "x": x[keep], "ux": ux[keep],
+                    "uy": uy[keep], "uz": uz[keep], "w": w[keep],
+                }
+            )
+        packed = self._pack_pooled(pooled)
+        for cap in self._caps:
+            base = int(mig_cap) if mig_cap is not None else max(_MIN_MIG, cap // 8)
+            self._mig_caps.append(self._init_mig_caps(base))
         tiles = np.zeros((S, 6, grid.box_nz, grid.box_nx), np.float32)
         return tiles, packed
 
@@ -1273,6 +1313,116 @@ class ShardedRuntime(_StragglerMixin):
         (pipeline flushed first)."""
         self.flush()
         return self._alive_by_box.copy()
+
+    # ------------------------------------------------------------------
+    # recovery surface (see repro.dist.recovery)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Minimal recoverable state at the last committed interval
+        boundary, as a host pytree of numpy leaves in **box-major** layout
+        (device-count independent): interior field tiles re-ordered to box
+        id, pooled alive particles per species (box membership is implied
+        by position), per-box counts, sim time/step, the committed
+        mapping, balancer EWMA state, and the adaptive ``mig_cap`` tables.
+        Flushes the pipeline first — an async in-flight round is *not*
+        committed and never appears in a snapshot (the staleness
+        contract's commit point)."""
+        self.flush()
+        inv = self._slot_of_box()  # slot of each box
+        tiles = np.asarray(jax.device_get(self._tiles), np.float32)[inv]
+        species_host = jax.device_get(self._species)
+        species = []
+        for d in species_host:
+            alive = np.asarray(d["alive"], bool).reshape(-1)
+            species.append(
+                {
+                    k: np.asarray(d[k], np.float32).reshape(-1)[alive]
+                    for k in _PKEYS
+                }
+            )
+        snap: Dict = {
+            "tiles": tiles,
+            "species": species,
+            "counts": self._alive_by_box.copy(),
+            "t": np.float64(self.t),
+            "step_idx": np.int64(self.step_idx),
+            "mapping": np.asarray(self.balancer.mapping, np.int64).copy(),
+            "n_devices": np.int64(self.n_devices),
+            "mig_caps": [
+                {int(o): np.int64(c) for o, c in d.items()} for d in self._mig_caps
+            ],
+        }
+        snap.update(snapshot_balancer(self.balancer))
+        rng = getattr(self, "rng_key", None)
+        if rng is not None:
+            snap["rng_key"] = np.asarray(jax.device_get(rng))
+        return snap
+
+    def restore(self, snap: Dict) -> None:
+        """Adopt a :meth:`snapshot` — possibly taken on a **different
+        device count**.  The checkpointed per-box populations are
+        re-knapsacked onto *this* runtime's mesh (the gate is bypassed,
+        capacities are honoured, and in neighbour mode the mapping is
+        locality-repaired exactly like an LB adoption), state is
+        re-committed slot-major under the rebuilt plan, and the adaptive
+        emigrant-pack capacities are restored conservatively: when the
+        device count changed, each new offset's pack starts at the *sum*
+        of the snapshot's learned capacities (per-pack demand concentrates
+        when hops collapse; the adaptive controller trims the excess after
+        ``mig_patience`` quiet intervals)."""
+        grid, S = self.grid, self.grid.n_boxes
+        tiles = np.asarray(snap["tiles"], np.float32)
+        if tiles.shape != (S, 6, grid.box_nz, grid.box_nx):
+            raise ValueError(
+                f"snapshot tiles {tiles.shape} do not fit this grid "
+                f"({S} boxes of 6x{grid.box_nz}x{grid.box_nx})"
+            )
+        if len(snap["species"]) != len(self._qm):
+            raise ValueError("snapshot species count does not match this problem")
+        self.flush()
+        restore_balancer(self.balancer, snap, n_boxes=S)
+        # re-knapsack the checkpointed populations onto THIS mesh
+        counts = np.nan_to_num(np.asarray(snap["counts"], np.float64), nan=0.0)
+        costs = np.maximum(counts, 0.0)
+        mapping = np.asarray(
+            self.balancer.propose(costs, box_coords=self.decomp.coords), np.int64
+        )
+        mapping = self._equalize(mapping, costs)
+        if self.comm == "neighbor":
+            mapping = locality_repair(
+                mapping, costs, self._home_dev, self.n_devices,
+                max_shift=self.locality_shift,
+            )
+        self.balancer.mapping = mapping
+        self.balancer.force_rebalance()
+        self._slot_box = self._slots_from_mapping(mapping)
+        self._build_comm_plan()
+        # emigrant packs: exact per-offset restore on the same device
+        # count; concentrate (sum) + floor when the mesh shrank or grew
+        saved = snap.get("mig_caps")
+        same_mesh = int(snap.get("n_devices", self.n_devices)) == self.n_devices
+        if saved is not None and len(saved) == len(self._mig_caps):
+            for s, d in enumerate(saved):
+                table = {int(o): int(c) for o, c in d.items()}
+                base = max(_MIN_MIG, self._caps[s] // 8) if s < len(self._caps) else _MIN_MIG
+                if same_mesh:
+                    self._mig_caps[s] = {
+                        o: max(base, table.get(o, base)) for o in self._mig_keys()
+                    }
+                else:
+                    pooled_cap = max(base, sum(table.values()))
+                    self._mig_caps[s] = {o: pooled_cap for o in self._mig_keys()}
+            self._mig_idle = {}
+        pooled = [
+            {k: np.asarray(sp[k], np.float32) for k in _PKEYS}
+            for sp in snap["species"]
+        ]
+        packed = self._pack_pooled(pooled)
+        self._commit_state(tiles[self._slot_box], packed)
+        self.t = float(snap["t"])
+        self.step_idx = int(snap["step_idx"])
+        if "rng_key" in snap:
+            self.rng_key = jnp.asarray(snap["rng_key"])
 
     @property
     def fields(self) -> Fields:

@@ -499,6 +499,33 @@ class IntervalPipeline:
         self._mark_resume()
         return host, meta
 
+    def drain(self) -> list:
+        """Harvest every round still in flight, in dispatch order, and
+        return the ``(host_history, meta)`` pairs.  Afterwards nothing is
+        in flight and :attr:`state` is the committed tail — the consistent
+        cut a checkpoint snapshot needs (the staleness contract's commit
+        point: an un-harvested round is *not* committed and never appears
+        in a snapshot)."""
+        out = []
+        while self._inflight:
+            out.append(self.harvest())
+        return out
+
+    def reset(self, state: Any) -> None:
+        """Replace the buffer chain with ``state`` — the restore hook.
+        Refuses while rounds are in flight (drain first): swapping the
+        state under an in-flight dispatch would race the worker and leak
+        the donated chain."""
+        if self._inflight:
+            raise RuntimeError(
+                f"cannot reset with {len(self._inflight)} rounds in flight; drain first"
+            )
+        if self._exec is not None:
+            self._exec.submit(lambda: None).result()  # barrier: idle the worker
+            self._check_correction()
+        self._state = state
+        self._resume_t = None
+
     def close(self) -> None:
         """Release the worker thread (after draining any queued
         dispatches).  Long-lived drivers that build many pipelines should

@@ -1,0 +1,221 @@
+"""`repro.ckpt.checkpoint` hardening tests — the recovery layer's disk
+contract.
+
+Covers what ``tests/test_infra.py``'s training-loop round-trips do not:
+template-free restore (the recovery path rebuilds runtime snapshots with
+no live template), int-keyed dict leaves (the sharded runtime's adaptive
+``mig_cap`` tables), async write-failure surfacing (record in the worker,
+re-raise at the next ``save``/``save_async``/``wait``), torn-write
+fallback to the newest *valid* step, and retention GC racing concurrent
+deletes.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (
+    CheckpointManager,
+    CorruptCheckpointError,
+    available_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+_ARRAYS = "arrays.npz"
+
+
+def _runtime_like_tree(step=3):
+    """A tree shaped like the runtimes' snapshots: nested dicts, a list of
+    per-species dicts, int-keyed mig_cap tables, numpy scalars."""
+    rng = np.random.default_rng(step)
+    return {
+        "tiles": rng.standard_normal((4, 6, 8, 8)).astype(np.float32),
+        "species": [
+            {k: rng.standard_normal(17).astype(np.float32) for k in ("z", "x", "w")},
+            {k: rng.standard_normal(9).astype(np.float32) for k in ("z", "x", "w")},
+        ],
+        "counts": rng.random(4),
+        "t": np.float64(1.5 * step),
+        "step_idx": np.int64(step),
+        "mapping": np.arange(4, dtype=np.int64),
+        "mig_caps": [{0: np.int64(32), 1: np.int64(64)}],
+    }
+
+
+def _assert_trees_equal(a, b):
+    import jax
+
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# template-free restore
+# ---------------------------------------------------------------------------
+
+
+def test_template_free_restore_rebuilds_runtime_tree(tmp_path):
+    """restore_checkpoint(dir, None) rebuilds the nested dict/list
+    structure from the manifest's recorded paths — including int dict
+    keys (mig_cap tables), which JSON path encoding must preserve."""
+    tree = _runtime_like_tree()
+    save_checkpoint(tmp_path, tree, step=3)
+    restored, step = restore_checkpoint(tmp_path, None)
+    assert step == 3
+    assert isinstance(restored, dict) and isinstance(restored["species"], list)
+    assert set(restored["mig_caps"][0].keys()) == {0, 1}  # int, not "0"
+    np.testing.assert_array_equal(restored["tiles"], tree["tiles"])
+    np.testing.assert_array_equal(restored["species"][1]["w"], tree["species"][1]["w"])
+    assert int(restored["step_idx"]) == 3
+
+
+def test_template_restore_still_validates_structure(tmp_path):
+    """The pre-existing template contract is intact: a mismatched
+    template raises ValueError (not CorruptCheckpointError — the data on
+    disk is fine, the caller's template is wrong)."""
+    save_checkpoint(tmp_path, {"a": np.zeros(3)}, step=0)
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"a": np.zeros(3), "b": np.zeros(2)})
+    tree, _ = restore_checkpoint(tmp_path, {"a": np.ones(3)})
+    np.testing.assert_array_equal(tree["a"], np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# corruption fallback
+# ---------------------------------------------------------------------------
+
+
+def _tear(directory, step):
+    p = directory / f"step_{step:010d}" / _ARRAYS
+    data = p.read_bytes()
+    p.write_bytes(data[: len(data) // 2])
+
+
+def test_corrupt_newest_falls_back_to_valid_step(tmp_path):
+    """A torn newest checkpoint is skipped with a warning and the
+    next-newest valid step restored — the recovery runner's guarantee
+    that a torn write cannot strand the run."""
+    for s in (1, 2, 3):
+        save_checkpoint(tmp_path, _runtime_like_tree(s), step=s)
+    _tear(tmp_path, 3)
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        tree, step = restore_checkpoint(tmp_path, None)
+    assert step == 2
+    _assert_trees_equal(tree, _runtime_like_tree(2))
+
+
+def test_explicitly_requested_corrupt_step_raises(tmp_path):
+    """An explicit step= request propagates the corruption instead of
+    silently serving different data."""
+    save_checkpoint(tmp_path, _runtime_like_tree(1), step=1)
+    save_checkpoint(tmp_path, _runtime_like_tree(2), step=2)
+    _tear(tmp_path, 2)
+    with pytest.raises(CorruptCheckpointError):
+        restore_checkpoint(tmp_path, None, step=2)
+
+
+def test_all_corrupt_raises_file_not_found(tmp_path):
+    save_checkpoint(tmp_path, _runtime_like_tree(1), step=1)
+    _tear(tmp_path, 1)
+    with pytest.warns(UserWarning), pytest.raises(FileNotFoundError):
+        restore_checkpoint(tmp_path, None)
+
+
+# ---------------------------------------------------------------------------
+# async save: ordering + error surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_async_saves_land_in_order(tmp_path):
+    """Back-to-back save_async calls serialize (each waits out its
+    predecessor): every step lands, newest wins the restore."""
+    mgr = CheckpointManager(tmp_path, keep=10)
+    for s in range(5):
+        mgr.save_async(_runtime_like_tree(s), step=s)
+    mgr.wait()
+    assert available_steps(tmp_path) == [0, 1, 2, 3, 4]
+    tree, step = restore_checkpoint(tmp_path, None)
+    assert step == 4 and int(tree["step_idx"]) == 4
+
+
+def test_async_write_failure_surfaces_at_next_save_and_wait(tmp_path):
+    """A worker-thread exception is not swallowed: it is recorded and
+    re-raised at the next save call — which therefore does NOT write —
+    and a retry through the synchronous path recovers."""
+    mgr = CheckpointManager(tmp_path, keep=5)
+    fail_once = {"left": 1}
+
+    def on_write(step):
+        if fail_once["left"]:
+            fail_once["left"] -= 1
+            raise OSError("injected write failure")
+
+    mgr.on_write = on_write
+    mgr.save_async(_runtime_like_tree(1), step=1)  # dies in the worker
+    with pytest.raises(OSError, match="injected write failure"):
+        mgr.save_async(_runtime_like_tree(2), step=2)
+    assert available_steps(tmp_path) == []  # neither write landed
+    mgr.wait()  # error already consumed: wait is clean now
+    mgr.save(_runtime_like_tree(2), step=2)  # the retry lands
+    assert mgr.latest_step() == 2
+
+
+def test_async_write_failure_surfaces_at_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.on_write = lambda step: (_ for _ in ()).throw(OSError("boom"))
+    mgr.save_async(_runtime_like_tree(1), step=1)
+    with pytest.raises(OSError, match="boom"):
+        mgr.wait()
+
+
+# ---------------------------------------------------------------------------
+# retention GC
+# ---------------------------------------------------------------------------
+
+
+def test_keep_gc_retains_newest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in range(5):
+        mgr.save(_runtime_like_tree(s), step=s)
+    assert available_steps(tmp_path) == [3, 4]
+
+
+def test_gc_tolerates_concurrent_deletes(tmp_path):
+    """Retention GC racing an external cleaner (or a second manager) must
+    not raise — rmtree of an already-deleted step is a no-op."""
+    import shutil
+
+    mgr = CheckpointManager(tmp_path, keep=1)
+    for s in range(4):
+        save_checkpoint(tmp_path, {"a": np.zeros(2)}, step=s)
+
+    stop = threading.Event()
+
+    def cleaner():
+        while not stop.is_set():
+            for s in range(4):
+                shutil.rmtree(tmp_path / f"step_{s:010d}", ignore_errors=True)
+
+    t = threading.Thread(target=cleaner)
+    t.start()
+    try:
+        for s in range(4, 30):
+            mgr.save({"a": np.zeros(2)}, step=s)
+    finally:
+        stop.set()
+        t.join()
+    assert mgr.latest_step() == 29
+
+
+def test_manager_restore_runtime_tree_roundtrip(tmp_path):
+    """Manager-level round trip of a runtime-shaped snapshot with
+    template-free restore — the exact call recovery makes."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save_async(_runtime_like_tree(7), step=7)
+    tree, step = mgr.restore(None)
+    assert step == 7
+    _assert_trees_equal(tree, _runtime_like_tree(7))

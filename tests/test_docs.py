@@ -33,6 +33,9 @@ DOCUMENTED_API = [
     "repro.dist.elastic",
     "repro.dist.straggler",
     "repro.dist.sharding",
+    "repro.dist.recovery",
+    "repro.dist.faults",
+    "repro.ckpt.checkpoint",
 ]
 
 
@@ -103,6 +106,27 @@ def test_architecture_doc_covers_the_async_pipeline():
         assert needle in text, f"docs/architecture.md must cover {needle!r}"
 
 
+def test_architecture_doc_covers_the_recovery_layer():
+    """The recovery section: what is checkpointed, how the commit point
+    interacts with the async staleness contract, and the recovery
+    sequence (restore -> re-knapsack -> degradation ladder)."""
+    text = open(os.path.join(DOCS, "architecture.md")).read()
+    for needle in (
+        "The recovery layer",
+        "minimal recoverable",
+        "box-major",
+        "CheckpointManager",
+        "RecoveryRunner",
+        "last committed",
+        "never checkpointed",
+        "re-knapsack",
+        "degradation ladder",
+        "torn",
+        "FaultSchedule",
+    ):
+        assert needle in text, f"docs/architecture.md must cover {needle!r}"
+
+
 #: every knob docs/tuning.md documents, with the benchmark that validates
 #: it — the doc must name both in the same guide (the acceptance contract:
 #: "every runtime knob it documents names the benchmark that validates it")
@@ -115,6 +139,10 @@ TUNING_KNOBS = {
     "improvement_threshold": "bench_threshold",
     "policy": "bench_policies",
     "cost_strategy": "bench_cost_schemes",
+    "ckpt_every": "bench_recovery",
+    "max_retries": "bench_recovery",
+    "backoff_s": "bench_recovery",
+    "min_devices": "bench_recovery",
 }
 
 

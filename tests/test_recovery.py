@@ -1,0 +1,335 @@
+"""Chaos suite for `repro.dist.recovery` + `repro.dist.faults`.
+
+Seeded fault schedules drive ``RecoveryRunner`` over both runtimes and
+both pipeline depths; every recovery must land back on the physics an
+uninterrupted same-seed run produces at the surviving device count (f32
+rounding), conserve particles, and keep the sharded runtime's
+one-sync-per-interval invariant intact.  Single-device tests run in the
+fast lane; the 2- and 8-device kill tests ride the multi-device CI lane
+(``REPRO_HOST_DEVICES=8``).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices; run with REPRO_HOST_DEVICES=2 (see conftest)",
+)
+
+eight_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices; run with REPRO_HOST_DEVICES=8 (the CI lane)",
+)
+
+INTERVAL = 2
+STEPS = 8
+
+
+def _small_problem(seed=0):
+    from repro.pic import laser_ion_problem
+
+    return laser_ion_problem(nz=32, nx=32, box_cells=8, ppc=2, seed=seed)
+
+
+def _factory(kind, pipeline="sync"):
+    from repro.dist import BoxRuntime, ShardedRuntime
+
+    cls = {"box": BoxRuntime, "sharded": ShardedRuntime}[kind]
+
+    def make(n_devices):
+        return cls(
+            _small_problem(), n_devices=n_devices, lb_interval=INTERVAL,
+            pipeline=pipeline,
+        )
+
+    return make
+
+
+def _assert_same_physics(rt, ref):
+    f, f_ref = np.asarray(rt.fields), np.asarray(ref.fields)
+    scale = max(float(np.abs(f_ref).max()), 1e-30)
+    assert np.abs(f - f_ref).max() <= 1e-5 * scale
+    assert rt.total_alive() == ref.total_alive()
+    assert getattr(rt, "dropped_total", 0) == 0  # sharded-only counter
+
+
+def _events(runner, kind):
+    return [e for e in runner.events if e["kind"] == kind]
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore round trip (no faults)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["box", "sharded"])
+def test_snapshot_restore_roundtrip_continues_identically(kind):
+    """A fresh runtime restored from a snapshot continues exactly like
+    the original: the snapshot is a complete committed cut."""
+    make = _factory(kind, pipeline="async")
+    rt = make(1)
+    rt.run(4)
+    snap = rt.snapshot()
+    rt2 = make(1)
+    rt2.restore(snap)
+    assert rt2.step_idx == rt.step_idx
+    rt.run(4)
+    rt2.run(4)
+    _assert_same_physics(rt2, rt)
+
+
+@pytest.mark.parametrize("kind", ["box", "sharded"])
+def test_checkpoint_roundtrip_through_disk(kind, tmp_path):
+    """snapshot -> CheckpointManager -> template-free restore ->
+    runtime.restore reproduces the run (the full recovery data path)."""
+    from repro.ckpt import CheckpointManager
+
+    make = _factory(kind)
+    rt = make(1)
+    rt.run(4)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save_async(rt.snapshot(), step=rt.step_idx)
+    tree, step = mgr.restore(None)
+    assert step == 4
+    rt2 = make(1)
+    rt2.restore(tree)
+    rt.run(4)
+    rt2.run(4)
+    _assert_same_physics(rt2, rt)
+
+
+# ---------------------------------------------------------------------------
+# kill-mid-interval: restore onto the survivors
+# ---------------------------------------------------------------------------
+
+
+def _run_kill(kind, pipeline, n_devices, kill_interval=2, kill_device=1, tmp_path=None):
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory(kind, pipeline)
+    inj = FaultInjector(
+        FaultSchedule([Fault("kill_device", interval=kill_interval, device=kill_device)])
+    )
+    runner = RecoveryRunner(make, n_devices, ckpt_dir=tmp_path, injector=inj)
+    runner.run(STEPS)
+    # uninterrupted same-seed reference at the SURVIVING device count
+    ref = make(runner.n_devices_active)
+    ref.run(STEPS)
+    _assert_same_physics(runner.runtime, ref)
+    restores = _events(runner, "restore")
+    assert len(restores) == 1
+    assert restores[0]["ckpt_step"] == kill_interval * INTERVAL
+    assert restores[0]["intervals_lost"] >= 1
+    assert runner.runtime.step_idx == STEPS
+    return runner
+
+
+@multi_device
+@pytest.mark.parametrize("kind", ["box", "sharded"])
+@pytest.mark.parametrize("pipeline", ["sync", "async"])
+def test_kill_mid_interval_two_devices(kind, pipeline, tmp_path):
+    """Device loss at interval 2 of a 2-device run: resume from the last
+    committed checkpoint on the survivor, finish with reference physics."""
+    runner = _run_kill(kind, pipeline, n_devices=2, tmp_path=tmp_path)
+    assert runner.n_devices_active == 1
+
+
+@eight_devices
+@pytest.mark.parametrize("kind", ["box", "sharded"])
+@pytest.mark.parametrize("pipeline", ["sync", "async"])
+def test_kill_mid_interval_eight_devices(kind, pipeline, tmp_path):
+    """8-device kill: the box runtime rebuilds on all 7 survivors; the
+    sharded runtime degrades to the largest count dividing its 16 boxes
+    (4) — the buildability probe in action."""
+    runner = _run_kill(kind, pipeline, n_devices=8, kill_device=3, tmp_path=tmp_path)
+    assert runner.n_devices_active == (7 if kind == "box" else 4)
+    if kind == "sharded":
+        assert any(
+            e.get("why") == "largest buildable count"
+            for e in _events(runner, "degrade")
+        )
+
+
+@multi_device
+def test_one_sync_per_interval_survives_recovery(tmp_path):
+    """The sharded runtime's device->host sync budget stays one per
+    interval after a kill+restore (checkpoints piggyback on the committed
+    snapshot, they do not add syncs)."""
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory("sharded")
+    inj = FaultInjector(FaultSchedule([Fault("kill_device", interval=1, device=1)]))
+    runner = RecoveryRunner(make, 2, ckpt_dir=tmp_path, injector=inj)
+    runner.run(STEPS)
+    rt = runner.runtime
+    h0 = rt.host_syncs
+    runner.run(2 * INTERVAL)  # two more clean intervals
+    assert rt.host_syncs == h0 + 2
+
+
+# ---------------------------------------------------------------------------
+# corruption, torn writes, writer faults
+# ---------------------------------------------------------------------------
+
+
+def test_nan_history_detected_and_repaired_in_place(tmp_path):
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory("box", pipeline="async")
+    inj = FaultInjector(FaultSchedule([Fault("nan_history", interval=1)]))
+    runner = RecoveryRunner(make, 1, ckpt_dir=tmp_path, injector=inj)
+    runner.run(STEPS)
+    ref = make(1)
+    ref.run(STEPS)
+    _assert_same_physics(runner.runtime, ref)
+    fails = _events(runner, "fail")
+    assert fails and fails[0]["cause"] == "CorruptState"
+    assert len(_events(runner, "restore")) == 1
+
+
+def test_torn_checkpoint_falls_back_to_previous_step(tmp_path):
+    """A torn newest checkpoint at the moment of failure: recovery skips
+    it with a warning and restores the next-newest valid step."""
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory("sharded")
+    inj = FaultInjector(
+        FaultSchedule(
+            [Fault("torn_ckpt", interval=2), Fault("nan_history", interval=2)]
+        )
+    )
+    runner = RecoveryRunner(make, 1, ckpt_dir=tmp_path, injector=inj)
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        runner.run(STEPS)
+    restores = _events(runner, "restore")
+    assert restores and restores[0]["ckpt_step"] == 1 * INTERVAL  # not the torn 2*INTERVAL
+    ref = make(1)
+    ref.run(STEPS)
+    _assert_same_physics(runner.runtime, ref)
+
+
+def test_worker_exc_surfaced_and_retried(tmp_path):
+    """An injected checkpoint-writer exception surfaces at the next save,
+    is logged as ckpt_error, and the retry leaves a valid final
+    checkpoint — the run itself never restores."""
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory("box")
+    inj = FaultInjector(FaultSchedule([Fault("worker_exc", interval=1)]))
+    runner = RecoveryRunner(make, 1, ckpt_dir=tmp_path, injector=inj)
+    runner.run(STEPS)
+    assert _events(runner, "ckpt_error")
+    assert not _events(runner, "restore")
+    tree, step = runner.ckpt.restore(None)
+    assert step == STEPS
+    ref = make(1)
+    ref.run(STEPS)
+    _assert_same_physics(runner.runtime, ref)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder + terminal
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_degradation_ladder_retries_tightens_then_drops_device(tmp_path):
+    """A fault that re-fires on every replay climbs the full ladder:
+    retry-with-backoff, tighter mig caps, then drop a device — and the
+    run still finishes with reference physics on the final count."""
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory("sharded")
+    inj = FaultInjector(
+        FaultSchedule([Fault("nan_history", interval=1, repeats=3)])
+    )
+    runner = RecoveryRunner(
+        make, 2, ckpt_dir=tmp_path, max_retries=1, backoff_s=0.001, injector=inj
+    )
+    runner.run(STEPS)
+    degrades = _events(runner, "degrade")
+    assert [d["what"] for d in degrades] == ["mig_cap", "devices"]
+    assert len(_events(runner, "fail")) == 3
+    assert runner.n_devices_active == 1
+    ref = make(1)
+    ref.run(STEPS)
+    _assert_same_physics(runner.runtime, ref)
+
+
+def test_last_device_loss_is_terminal(tmp_path):
+    from repro.dist import (
+        Fault,
+        FaultInjector,
+        FaultSchedule,
+        RecoveryError,
+        RecoveryRunner,
+    )
+
+    make = _factory("box")
+    inj = FaultInjector(FaultSchedule([Fault("kill_device", interval=1, device=0)]))
+    runner = RecoveryRunner(make, 1, ckpt_dir=tmp_path, injector=inj)
+    with pytest.raises(RecoveryError, match="last remaining device"):
+        runner.run(STEPS)
+    terms = _events(runner, "terminal")
+    assert terms and "last remaining device" in terms[0]["error"]
+    # the pre-fault checkpoint is still on disk: the abort is restartable
+    tree, step = runner.ckpt.restore(None)
+    assert step >= 0
+
+
+@multi_device
+def test_straggler_spike_absorbed_without_restore(tmp_path):
+    """A straggler spike is absorbed by the capacity loop (EWMA capacity
+    drop on the slow device), never touching the restore path."""
+    from repro.dist import Fault, FaultInjector, FaultSchedule, RecoveryRunner
+
+    make = _factory("sharded")
+    inj = FaultInjector(
+        FaultSchedule(
+            [Fault("straggler_spike", interval=1, device=1, magnitude=8.0, span=2)]
+        )
+    )
+    runner = RecoveryRunner(make, 2, ckpt_dir=tmp_path, injector=inj)
+    runner.run(6 * INTERVAL)
+    assert not _events(runner, "restore")
+    assert not _events(runner, "fail")
+    caps = runner.runtime.balancer.capacities
+    assert caps is not None and caps[1] < caps[0]
+    assert runner.runtime.dropped_total == 0  # sharded: nothing overflowed
+
+
+# ---------------------------------------------------------------------------
+# cadence, schedule, elastic terminal event
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_cadence_every_two_intervals(tmp_path):
+    from repro.ckpt import available_steps
+    from repro.dist import RecoveryRunner
+
+    runner = RecoveryRunner(
+        _factory("box"), 1, ckpt_dir=tmp_path, ckpt_every=2, keep=10
+    )
+    runner.run(STEPS)  # 4 intervals of 2 steps
+    assert available_steps(tmp_path) == [0, 4, 8]
+
+
+def test_seeded_schedule_is_reproducible():
+    from repro.dist import FaultSchedule
+
+    a = FaultSchedule(seed=7, n_intervals=50, rate=0.2, kinds=("kill_device", "nan_history"), n_devices=4)
+    b = FaultSchedule(seed=7, n_intervals=50, rate=0.2, kinds=("kill_device", "nan_history"), n_devices=4)
+    assert a.to_json() == b.to_json()
+    assert a.to_json()  # the draw actually produced faults
+
+
+def test_elastic_runner_last_device_terminal_event():
+    from repro.dist import ElasticRunner
+
+    er = ElasticRunner(n_devices=1, n_boxes=4, interval=2)
+    with pytest.raises(RuntimeError, match="last remaining device"):
+        er.fail_device(0)
+    assert any(e["kind"] == "terminal" for e in er.events)
+    assert er.lb.n_devices == 1  # the balancer was not shrunk
