@@ -2,38 +2,66 @@
 
 Reproduction targets: E_none < E_static < E_dynamic; dynamic speedup over
 none ~3-4x and over static ~1.2-1.3x in the paper's 96-GPU run (our scaled
-run reproduces the ordering and regime, not the exact figures — recorded in
-EXPERIMENTS.md).
+run reproduces the ordering and regime, not the exact figures — the
+scaled-run-vs-paper mapping and expected deviations are recorded in
+`EXPERIMENTS.md`).
+
+:func:`mode_comparison` is the reusable half: ``bench_scaling`` runs it
+once per registered scenario to build the scenario × LB-mode matrix, so
+the fig6b figure and the matrix share one code path.
 """
 from __future__ import annotations
 
-from .common import run_sim, row
+from typing import Dict, Optional, Tuple
+
+from repro.pic import Simulation
+
+from .common import run_scenario, row
 
 N = 130  # laser reaches the target ~step 45; drift follows
 
+MODES = ("none", "static", "dynamic")
+
+
+def mode_comparison(
+    scenario: str = "laser_ion",
+    n_steps: int = N,
+    problem_kwargs: Optional[Dict] = None,
+    seed: int = 0,
+) -> Dict[str, Simulation]:
+    """One scenario under each LB mode: ``none`` (lb_enabled=False),
+    ``static`` (balance once at the first opportunity), ``dynamic`` (the
+    paper's default).  Identical problem + seed across modes, so walltime
+    ratios are speedups."""
+    kw = dict(problem_kwargs=problem_kwargs, n_steps=n_steps, seed=seed)
+    return {
+        "none": run_scenario(scenario, lb_enabled=False, **kw),
+        "static": run_scenario(scenario, lb_static=True, **kw),
+        "dynamic": run_scenario(scenario, **kw),
+    }
+
+
+def speedup_row(name: str, sims: Dict[str, Simulation]) -> dict:
+    """The fig6b-style cross-mode summary row for one scenario."""
+    none, static, dynamic = sims["none"], sims["static"], sims["dynamic"]
+    return {
+        "name": name,
+        "us_per_call": 0.0,
+        "derived": {
+            "dynamic_over_none": round(none.modeled_walltime / dynamic.modeled_walltime, 3),
+            "dynamic_over_static": round(
+                static.modeled_walltime / dynamic.modeled_walltime, 3
+            ),
+            "static_over_none": round(none.modeled_walltime / static.modeled_walltime, 3),
+            "mean_eff_none": round(none.mean_efficiency, 3),
+            "mean_eff_static": round(static.mean_efficiency, 3),
+            "mean_eff_dynamic": round(dynamic.mean_efficiency, 3),
+        },
+    }
+
 
 def run():
-    rows = []
-    none = run_sim(lb_enabled=False, n_steps=N)
-    static = run_sim(lb_static=True, n_steps=N)
-    dynamic = run_sim(n_steps=N)
-    rows.append(row("fig6b_lb_mode/none", none))
-    rows.append(row("fig6b_lb_mode/static", static))
-    rows.append(row("fig6b_lb_mode/dynamic", dynamic))
-    rows.append(
-        {
-            "name": "fig6b_speedups",
-            "us_per_call": 0.0,
-            "derived": {
-                "dynamic_over_none": round(none.modeled_walltime / dynamic.modeled_walltime, 3),
-                "dynamic_over_static": round(
-                    static.modeled_walltime / dynamic.modeled_walltime, 3
-                ),
-                "static_over_none": round(none.modeled_walltime / static.modeled_walltime, 3),
-                "mean_eff_none": round(none.mean_efficiency, 3),
-                "mean_eff_static": round(static.mean_efficiency, 3),
-                "mean_eff_dynamic": round(dynamic.mean_efficiency, 3),
-            },
-        }
-    )
+    sims = mode_comparison("laser_ion", n_steps=N)
+    rows = [row(f"fig6b_lb_mode/{mode}", sims[mode]) for mode in MODES]
+    rows.append(speedup_row("fig6b_speedups", sims))
     return rows

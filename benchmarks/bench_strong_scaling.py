@@ -3,10 +3,16 @@
 Fixed problem, increasing virtual devices; fit t ∝ n^-x (paper: x=0.91 in
 2D3V).  The non-ideality comes from the halo-communication term, which does
 not shrink with device count as fast as compute does.
+
+:func:`sweep` is the reusable half: ``bench_scaling`` calls it to obtain
+the fitted :class:`~repro.core.StrongScalingModel` whose exponent feeds the
+Eq.-2 predicted-max-speedup computation for every scenario row, so the fig7
+figure and the scenario matrix share one fit.
 """
 from __future__ import annotations
 
-import numpy as np
+import time
+from typing import List, Sequence, Tuple
 
 from repro.core import StrongScalingModel
 from repro.pic import Simulation, SimConfig, uniform_plasma_problem
@@ -14,24 +20,30 @@ from repro.pic import Simulation, SimConfig, uniform_plasma_problem
 from .common import row
 
 
-def run():
+def sweep(
+    n_devices: Sequence[int] = (2, 4, 8, 16, 32),
+    n_steps: int = 15,
+    name_prefix: str = "fig7_strong_scaling",
+) -> Tuple[StrongScalingModel, List[dict]]:
+    """Run the uniform-plasma strong-scaling sweep and fit ``t ∝ n^-x``.
+
+    Returns the fitted model plus the per-point and fit rows (the fig7
+    figure), so callers embed the same rows the standalone module emits.
+    """
     rows = []
-    n_devices = [2, 4, 8, 16, 32]
     walltimes = []
     for n in n_devices:
         problem = uniform_plasma_problem(nz=128, nx=128, box_cells=16, ppc=4)
         sim = Simulation(problem, SimConfig(n_virtual_devices=n, lb_enabled=False))
-        import time
-
         t0 = time.perf_counter()
-        sim.run(15)
+        sim.run(n_steps)
         sim.host_seconds = time.perf_counter() - t0
         walltimes.append(sim.modeled_walltime)
-        rows.append(row(f"fig7_strong_scaling/n{n}", sim))
-    model = StrongScalingModel.fit(n_devices, walltimes)
+        rows.append(row(f"{name_prefix}/n{n}", sim))
+    model = StrongScalingModel.fit(list(n_devices), walltimes)
     rows.append(
         {
-            "name": "fig7_strong_scaling_fit",
+            "name": f"{name_prefix}_fit",
             "us_per_call": 0.0,
             "derived": {
                 "x_exponent": round(model.x, 4),
@@ -40,4 +52,8 @@ def run():
             },
         }
     )
-    return rows
+    return model, rows
+
+
+def run():
+    return sweep()[1]

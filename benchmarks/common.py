@@ -17,7 +17,13 @@ from repro.launch import set_performance_flags
 
 set_performance_flags()  # consistent tuned XLA env before backend init
 
-from repro.pic import Simulation, SimConfig, laser_ion_problem, uniform_plasma_problem
+from repro.pic import (
+    Simulation,
+    SimConfig,
+    get_scenario,
+    laser_ion_problem,
+    uniform_plasma_problem,
+)
 
 # fiducial scaled problem (paper: 1920^2 cells, 64^2 boxes, 96 GPUs;
 # here: 128^2 cells, 16^2 boxes, 8 virtual devices — same boxes/GPU ratio
@@ -39,6 +45,30 @@ def run_sim(
     pk.update(problem_kwargs or {})
     pk["seed"] = seed
     problem = uniform_plasma_problem(**pk) if uniform else laser_ion_problem(**pk)
+    cfg = SimConfig(**{"n_virtual_devices": N_DEVICES, **cfg_kwargs})
+    sim = Simulation(problem, cfg)
+    t0 = time.perf_counter()
+    sim.run(n_steps)
+    sim.host_seconds = time.perf_counter() - t0
+    return sim
+
+
+def run_scenario(
+    name: str,
+    *,
+    problem_kwargs: Optional[Dict] = None,
+    n_steps: int = N_STEPS,
+    seed: int = 0,
+    **cfg_kwargs,
+) -> Simulation:
+    """Run one registered scenario (``repro.pic.list_scenarios``) at the
+    shared fiducial size — the scenario-matrix analogue of :func:`run_sim`.
+    Per-scenario rows stay comparable because every scenario is built from
+    the same ``FIDUCIAL`` kwargs unless ``problem_kwargs`` overrides them."""
+    pk = dict(FIDUCIAL)
+    pk.update(problem_kwargs or {})
+    pk["seed"] = seed
+    problem = get_scenario(name).build(**pk)
     cfg = SimConfig(**{"n_virtual_devices": N_DEVICES, **cfg_kwargs})
     sim = Simulation(problem, cfg)
     t0 = time.perf_counter()

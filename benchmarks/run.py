@@ -42,6 +42,7 @@ MODULES = [
     "bench_threshold",        # Fig 6a group 5
     "bench_speedup",          # Fig 6b + Fig 5
     "bench_strong_scaling",   # Fig 7
+    "bench_scaling",          # scenario matrix + fraction-of-predicted-max
     "bench_weak_scaling",     # Fig 8
     "bench_moe_dlb",          # paper technique -> MoE expert parallelism
     "bench_elastic",          # fault tolerance / checkpoint (runnability)

@@ -23,7 +23,13 @@ from .costs import (
     normalize_costs,
 )
 from .balancer import LBEvent, LoadBalancer, efficiency, make_policy
-from .perfmodel import StrongScalingModel, fit_strong_scaling, predicted_max_speedup
+from .perfmodel import (
+    StrongScalingModel,
+    fit_strong_scaling,
+    fraction_of_predicted,
+    imbalance_summary,
+    predicted_max_speedup,
+)
 from .policies import (
     device_loads,
     hop_radius,
@@ -51,6 +57,8 @@ __all__ = [
     "StrongScalingModel",
     "fit_strong_scaling",
     "predicted_max_speedup",
+    "fraction_of_predicted",
+    "imbalance_summary",
     "device_loads",
     "hop_radius",
     "knapsack_partition",

@@ -18,7 +18,13 @@ from typing import Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["fit_strong_scaling", "predicted_max_speedup", "StrongScalingModel"]
+__all__ = [
+    "fit_strong_scaling",
+    "predicted_max_speedup",
+    "fraction_of_predicted",
+    "imbalance_summary",
+    "StrongScalingModel",
+]
 
 
 def fit_strong_scaling(n_nodes: Sequence[float], walltimes: Sequence[float]) -> Tuple[float, float]:
@@ -40,7 +46,52 @@ def predicted_max_speedup(initial_efficiency: float, x: float) -> float:
     """Paper Eq. 2: ``S = (1/E0)^x``."""
     if not 0.0 < initial_efficiency <= 1.0:
         raise ValueError("initial efficiency must be in (0, 1]")
+    if x < 0.0:
+        raise ValueError("scaling exponent x must be >= 0")
     return float((1.0 / initial_efficiency) ** x)
+
+
+def fraction_of_predicted(
+    measured_speedup: float, initial_efficiency: float, x: float
+) -> float:
+    """Measured LB speedup as a fraction of the Eq.-2 theoretical maximum
+    — the paper's headline 62–88% statistic.
+
+    Degenerate cases are well defined rather than singular: ``E0 = 1``
+    (perfectly balanced start) or ``x = 0`` (no strong-scaling headroom)
+    both give a predicted maximum of exactly 1, so the fraction equals the
+    measured speedup itself — a no-op balancer on a balanced load reports
+    ≈1.0, not inf/NaN.
+    """
+    if measured_speedup <= 0.0:
+        raise ValueError("measured speedup must be positive")
+    return measured_speedup / predicted_max_speedup(initial_efficiency, x)
+
+
+def imbalance_summary(max_over_avg: Sequence[float]) -> dict:
+    """Per-scenario imbalance character from a run's per-step
+    ``c_max/c_avg`` history (``Simulation.history['max_over_avg']``).
+
+    Returns the Eq.-2 inputs and how the imbalance evolved: ``e0``
+    (initial efficiency, the paper's prediction basis), ``e_min``/
+    ``e_mean`` over the run, and the raw ``imbalance0``/``imbalance_max``
+    ratios.  A drifting hotspot shows ``imbalance_max`` well above
+    ``imbalance0``; a static gradient holds both ≈ equal; a uniform load
+    keeps everything ≈ 1.
+    """
+    r = np.asarray(max_over_avg, dtype=np.float64)
+    if r.ndim != 1 or len(r) == 0:
+        raise ValueError("need a non-empty 1-D max/avg history")
+    if np.any(r < 1.0 - 1e-9):
+        raise ValueError("max/avg ratios must be >= 1")
+    r = np.maximum(r, 1.0)
+    return {
+        "e0": float(1.0 / r[0]),
+        "e_min": float(1.0 / r.max()),
+        "e_mean": float(np.mean(1.0 / r)),
+        "imbalance0": float(r[0]),
+        "imbalance_max": float(r.max()),
+    }
 
 
 @dataclass(frozen=True)

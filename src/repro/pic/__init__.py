@@ -12,7 +12,18 @@ from .deposition import deposit_current, box_work_counters
 from .boxes import BoxDecomposition
 from .engine import StepOutputs, build_step_body, make_interval_fn
 from .laser import LaserAntenna
-from .problem import laser_ion_problem, uniform_plasma_problem
+from .problem import (
+    Scenario,
+    colliding_beams_problem,
+    density_ramp_problem,
+    get_scenario,
+    laser_ion_problem,
+    list_scenarios,
+    moving_laser_problem,
+    register_scenario,
+    uniform_null_problem,
+    uniform_plasma_problem,
+)
 from .stepper import Simulation, SimConfig
 
 __all__ = [
@@ -30,6 +41,14 @@ __all__ = [
     "LaserAntenna",
     "laser_ion_problem",
     "uniform_plasma_problem",
+    "moving_laser_problem",
+    "colliding_beams_problem",
+    "density_ramp_problem",
+    "uniform_null_problem",
+    "Scenario",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
     "Simulation",
     "SimConfig",
     "StepOutputs",

@@ -127,6 +127,55 @@ def test_architecture_doc_covers_the_recovery_layer():
         assert needle in text, f"docs/architecture.md must cover {needle!r}"
 
 
+def test_architecture_doc_covers_the_scenario_registry():
+    """The scenario-registry section: how scenarios are registered and
+    enumerated, the transverse-stratification geometry rule, and the
+    inverted null-case contract."""
+    text = open(os.path.join(DOCS, "architecture.md")).read()
+    for needle in (
+        "The scenario registry",
+        "register_scenario",
+        "list_scenarios",
+        "imbalance character",
+        "round-robin",
+        "transversely",
+        "expect_noop",
+        "check_gates.py",
+    ):
+        assert needle in text, f"docs/architecture.md must cover {needle!r}"
+
+
+def test_benchmarks_doc_covers_the_scaling_matrix():
+    """The bench_scaling section must document the artifact schema and how
+    to read the fraction-of-predicted statistic, including why the CI gate
+    is looser than the paper's 62-88% band."""
+    text = open(os.path.join(DOCS, "benchmarks.md")).read()
+    for needle in (
+        "scaling/<scenario>/",
+        "fraction_of_predicted",
+        "predicted_max_speedup",
+        "62–88%",
+        ">= 0.5",
+        "check_gates.py",
+        "uniform_null",
+    ):
+        assert needle in text, f"docs/benchmarks.md must cover {needle!r}"
+
+
+def test_ci_gates_are_declarative_not_heredocs():
+    """The CI workflow must route every artifact gate through the one
+    declarative table in benchmarks/check_gates.py — inline `python -
+    <<EOF` heredoc gates are how thresholds drift apart unreviewed."""
+    text = open(os.path.join(ROOT, ".github", "workflows", "ci.yml")).read()
+    assert "<<" not in text, (
+        "ci.yml must not embed heredoc gate scripts; add a Gate to "
+        "benchmarks/check_gates.py instead"
+    )
+    assert "check_gates.py" in text
+    # a superseded push must not keep burning the 60-minute lane
+    assert "cancel-in-progress: true" in text
+
+
 #: every knob docs/tuning.md documents, with the benchmark that validates
 #: it — the doc must name both in the same guide (the acceptance contract:
 #: "every runtime knob it documents names the benchmark that validates it")

@@ -1,0 +1,189 @@
+"""Scenario-registry coverage: every registered scenario must *run*, not
+just build — N LB rounds under ``ShardedRuntime`` with particle
+conservation and zero emigration-pack drops — and the uniform null case
+must leave the balancer idle.  Plus unit tests for the perfmodel helpers
+the scenario matrix (``benchmarks/bench_scaling.py``) is built on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    fraction_of_predicted,
+    imbalance_summary,
+    predicted_max_speedup,
+)
+from repro.pic import (
+    Simulation,
+    SimConfig,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+    uniform_plasma_problem,
+)
+
+SMALL = dict(nz=32, nx=32, box_cells=8, ppc=2, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_the_scenario_matrix():
+    names = list_scenarios()
+    assert names == sorted(names)
+    for required in (
+        "laser_ion",
+        "uniform_plasma",
+        "moving_laser",
+        "colliding_beams",
+        "density_ramp",
+        "uniform_null",
+    ):
+        assert required in names
+
+
+def test_get_scenario_unknown_name_lists_what_exists():
+    with pytest.raises(KeyError, match="laser_ion"):
+        get_scenario("no_such_scenario")
+
+
+def test_register_scenario_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario(
+            "laser_ion", uniform_plasma_problem, imbalance="uniform"
+        )
+
+
+def test_scenarios_carry_imbalance_metadata():
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        assert sc.imbalance, f"{name} must declare its imbalance character"
+        assert sc.description, f"{name} must carry a description"
+    assert get_scenario("uniform_null").expect_noop
+    assert not get_scenario("laser_ion").expect_noop
+
+
+# ---------------------------------------------------------------------------
+# every scenario runs under the sharded runtime
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_scenario_runs_under_sharded_runtime(name):
+    """Build small, run 2 LB rounds as one shard_map program per round:
+    no emigration-pack drops ever, and particle count conserved up to
+    boundary absorption (the domain is absorbing, so fills that touch a
+    wall lose the few markers that random-walk off the edge).  mig_cap
+    is set explicitly because the bulk-drift scenarios exceed the
+    cold-start pack heuristic in their very first interval, before the
+    adaptive controller has any demand history to react to (the same
+    reason every module in benchmarks/ passes mig_cap; docs/tuning.md)."""
+    from repro.dist.sharded_runtime import ShardedRuntime
+
+    problem = get_scenario(name).build(**SMALL)
+    rt = ShardedRuntime(problem, n_devices=1, lb_interval=2, mig_cap=64)
+    n0 = rt.total_alive()
+    rt.run(4)
+    assert rt.dropped_total == 0
+    assert n0 * 0.995 <= rt.total_alive() <= n0
+    for key in ("field_energy", "kinetic_energy"):
+        assert np.all(np.isfinite(rt.history[key])), f"{name}: {key} went non-finite"
+
+
+def test_moving_laser_conserves_exactly():
+    """The drifting spot starts well inside the absorbing domain, so over
+    a short window nothing may die — a loss here means the scenario
+    geometry regressed (spot too close to a wall for its drift).  The
+    beams scenario is exempt: its slabs span all of z, so z-wall
+    absorption of thermal stragglers is part of its normal behavior."""
+    from repro.dist.sharded_runtime import ShardedRuntime
+
+    rt = ShardedRuntime(
+        get_scenario("moving_laser").build(**SMALL),
+        n_devices=1, lb_interval=2, mig_cap=64,
+    )
+    n0 = rt.total_alive()
+    rt.run(4)
+    assert rt.total_alive() == n0
+
+
+def test_null_case_triggers_no_rebalances():
+    """The uniform null case at a size where per-box sampling noise sits
+    well under the 10% adoption threshold: the balancer is offered the
+    load every round and must decline every time — and running with LB
+    enabled must cost ~nothing vs LB off."""
+    kw = dict(nz=64, nx=64, box_cells=16, ppc=4, seed=0)
+    build = get_scenario("uniform_null").build
+    lb_on = Simulation(build(**kw), SimConfig(n_virtual_devices=4))
+    lb_on.run(30)
+    assert lb_on.history["lb_steps"] == []
+    assert all(not e.adopted for e in lb_on.balancer.events)
+
+    lb_off = Simulation(build(**kw), SimConfig(n_virtual_devices=4, lb_enabled=False))
+    lb_off.run(30)
+    slowdown = lb_on.modeled_walltime / lb_off.modeled_walltime
+    assert slowdown <= 1.05
+
+
+def test_drifting_scenario_exercises_the_balancer():
+    """The registry's reason to exist: a drifting scenario must present a
+    real initial imbalance (E0 well below 1) that dynamic LB then fixes."""
+    # box_cells=8 gives 8 box columns, so each slab covers whole columns;
+    # at box_cells=16 the 4 column boundaries fall exactly on the slab
+    # centers (0.25/0.75 lx) and the load splits evenly by accident
+    sim = Simulation(
+        get_scenario("colliding_beams").build(nz=64, nx=64, box_cells=8, ppc=4),
+        SimConfig(n_virtual_devices=4),
+    )
+    sim.run(20)
+    assert len(sim.history["lb_steps"]) >= 1
+    first = sim.balancer.events[0]
+    assert first.current_efficiency < 0.9
+    assert first.proposed_efficiency > first.current_efficiency
+
+
+# ---------------------------------------------------------------------------
+# perfmodel helpers
+# ---------------------------------------------------------------------------
+
+
+def test_fraction_of_predicted_basic():
+    # E0=0.5, x=1: predicted max = 2; measuring 1.5 attains 75%
+    assert fraction_of_predicted(1.5, 0.5, 1.0) == pytest.approx(0.75)
+
+
+def test_fraction_of_predicted_degenerate_e0_is_identity():
+    # perfectly balanced start: predicted max is exactly 1
+    assert predicted_max_speedup(1.0, 0.91) == 1.0
+    assert fraction_of_predicted(1.02, 1.0, 0.91) == pytest.approx(1.02)
+
+
+def test_fraction_of_predicted_degenerate_x_zero():
+    # x -> 0: no strong-scaling headroom, predicted max -> 1 for any E0
+    assert predicted_max_speedup(0.25, 0.0) == 1.0
+    assert fraction_of_predicted(1.3, 0.25, 0.0) == pytest.approx(1.3)
+
+
+def test_fraction_of_predicted_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        fraction_of_predicted(0.0, 0.5, 0.9)  # non-positive speedup
+    with pytest.raises(ValueError):
+        fraction_of_predicted(1.5, 0.0, 0.9)  # E0 out of (0, 1]
+    with pytest.raises(ValueError):
+        fraction_of_predicted(1.5, 1.5, 0.9)
+    with pytest.raises(ValueError):
+        fraction_of_predicted(1.5, 0.5, -0.1)  # negative exponent
+
+
+def test_imbalance_summary_characters():
+    drifting = imbalance_summary([2.0, 2.5, 4.0])
+    assert drifting["e0"] == pytest.approx(0.5)
+    assert drifting["e_min"] == pytest.approx(0.25)
+    assert drifting["imbalance_max"] == pytest.approx(4.0)
+    uniform = imbalance_summary([1.0, 1.0 + 1e-12])  # rounding-safe at 1
+    assert uniform["e0"] == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        imbalance_summary([])
+    with pytest.raises(ValueError):
+        imbalance_summary([0.5])  # max/avg below 1 is impossible
