@@ -1,85 +1,188 @@
-"""The paper's technique applied to MoE expert parallelism (DESIGN.md §4).
+"""The paper's DLB loop on MoE expert parallelism: the serving-lane figure.
 
-A skewed token distribution routes unevenly across experts; per-expert
-costs are measured in situ (routed-token heuristic vs dispatched-slot work
-counter), and a capacity-aware knapsack placement of experts onto devices
-is adopted under the 10% efficiency gate.  Reports efficiency before/after
-and the modeled step-time improvement for EP groups.
+Paper-analogue: this is the serving translation of the Fig. 6b speedup
+story — the PIC boxes become experts (``repro.serve.ExpertRuntime``), the
+laser front sweeping across boxes becomes a hot-topic flip sweeping across
+experts (``repro.serve.TrafficGenerator``), and the Eq.-1 efficiency trace
+under shifting load is the Fig. 6b efficiency-over-time analogue (see
+docs/architecture.md §"The serving layer" and EXPERIMENTS.md).
+
+Two mixtral/scout-shaped toy configs (16 experts, so 8 EP devices hold 2
+experts each — a placement the knapsack can actually improve) are served
+under identical seeded skewed traffic with a hot-topic flip mid-run, in
+three modes at 1 and 8 modeled devices:
+
+  * ``none``    — experts stay in their initial contiguous blocks;
+  * ``static``  — balance once at the first boundary, then freeze
+    (the paper's static-LB baseline: right until the flip, wrong after);
+  * ``dynamic`` — the full loop: in-situ dispatched-slot counters ->
+    EWMA -> count-preserving knapsack -> 10% adoption gate.
+
+Throughput is **modeled** tokens/s: per LB interval the hottest device's
+routed work bounds the bulk-synchronous EP step, so modeled walltime =
+sum over intervals of max-device load, and tokens/s = tokens served /
+that (unit-free; the per-expert cost sequence is permutation-invariant,
+so modes on the same traffic are apples-to-apples).  On skewed traffic
+the gates in ``benchmarks/check_gates.py`` require
+``dynamic >= static >= none`` tokens/s and the matching Eq.-1 mean
+efficiency ordering; a ``null_traffic`` row (uniform, no flips) requires
+the 10% gate to keep adoptions at 0 — the thrash guard.
+
+Run as:   PYTHONPATH=src python benchmarks/bench_moe_dlb.py [--quick]
+or via:   PYTHONPATH=src python -m benchmarks.run --only bench_moe_dlb
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LoadBalancer, efficiency
-from repro.models import ModelConfig, init_params
-from repro.models.moe import apply_expert_permutation, expert_costs, moe
+from repro.configs.llama4_scout_17b_a16e import SMOKE as SCOUT_SMOKE
+from repro.configs.mixtral_8x7b import SMOKE as MIXTRAL_SMOKE
+from repro.models.moe import init_moe
+from repro.serve import ExpertRuntime, TrafficConfig, TrafficGenerator
+
+#: 16 experts on 8 devices = 2 experts/device — with E == D every
+#: permutation gives identical device loads (pigeonhole) and DLB has
+#: nothing to improve, so the toys scale the expert count up, not down.
+TOY_EXPERTS = 16
+
+MODES = ("none", "static", "dynamic")
 
 
-def run():
-    rows = []
-    cfg = ModelConfig(
-        name="moe-dlb-bench", kind="moe", n_layers=2, d_model=128, n_heads=4,
-        n_kv_heads=2, d_ff=256, vocab=1024, n_experts=8, top_k=2,
-        capacity_factor=2.0,
+def _toys():
+    """Mixtral- and scout-shaped toy configs (f32 params so the adopted
+    permutation's physics check is exact-dtype, not cast-noise)."""
+    mixtral = MIXTRAL_SMOKE.scaled(
+        name="mixtral_toy", n_experts=TOY_EXPERTS, param_dtype=jnp.float32
     )
-    params, _ = init_params(jax.random.PRNGKey(0), cfg)
-    moe_params = jax.tree.map(lambda x: x[0], params["blocks"]["a0"]["ff"])
+    scout = SCOUT_SMOKE.scaled(
+        name="scout_toy", n_experts=TOY_EXPERTS, param_dtype=jnp.float32
+    )
+    return mixtral, scout
 
-    # skewed inputs: four unequal clusters -> unequal hot experts (a
-    # knapsack-fixable imbalance; two equal hot experts would already be
-    # max-bound by the largest expert and the gate would correctly refuse)
-    rng = np.random.default_rng(0)
-    centers = rng.normal(0, 1, (4, cfg.d_model))
-    cluster = rng.choice(4, size=1024, p=[0.4, 0.3, 0.2, 0.1])
-    x = jnp.asarray(
-        centers[cluster] + 0.05 * rng.normal(0, 1, (1024, cfg.d_model)), jnp.float32
-    )[None]
 
+def _traffic(cfg, n_steps: int, *, null: bool = False) -> TrafficGenerator:
+    """Heavy skewed traffic with a hot-topic flip at ~60% of the run
+    (``null=True``: uniform, flat, no flips — the thrash-guard trace)."""
+    flip = max(1, int(n_steps * 0.6))
+    tc = TrafficConfig(
+        seed=7,
+        d_model=cfg.d_model,
+        # Null traffic uses a bigger batch: more tokens per interval means
+        # less multinomial routing noise, so the no-adoption guard tests
+        # the gate against near-uniform load, not against sampling jitter.
+        batch=16 if null else 2,
+        seq=32,
+        n_topics=8,
+        skew=0.0 if null else 2.5,
+        period=n_steps,
+        night_load=1.0 if null else 0.4,
+        flip_every=0 if null else flip,
+        burst_every=0 if null else max(n_steps // 5, 1),
+        burst_gain=1.0 if null else 4.0,
+        # Null traffic drowns the topic directions in isotropic noise so
+        # routing is near-uniform at the *expert* level too — the trace
+        # the 10% gate must refuse to act on.
+        noise=2.0 if null else 0.15,
+    )
+    return TrafficGenerator(tc)
+
+
+def _serve(cfg, mode: str, n_devices: int, n_steps: int, interval: int,
+           *, null: bool = False) -> dict:
+    """Serve one (config, mode, device-count) cell and summarize it."""
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg)
+    rt = ExpertRuntime(
+        params,
+        cfg,
+        _traffic(cfg, n_steps, null=null),
+        n_devices=n_devices,
+        lb_interval=interval,
+        lb_enabled=(mode != "none"),
+        static=(mode == "static"),
+        # EWMA across rounds (paper's smoothing): the knapsack sees the
+        # traffic's trend, not one interval's multinomial routing noise.
+        ema_alpha=0.5,
+    )
     t0 = time.perf_counter()
-    _, stats = jax.jit(lambda p, x: moe(p, cfg, x))(moe_params, x)
-    step_us = 1e6 * (time.perf_counter() - t0)
+    rt.run(n_steps)
+    rt.flush()
+    wall = time.perf_counter() - t0
+    modeled = rt.modeled_interval_time()
+    return {
+        "wall_us_per_step": 1e6 * wall / n_steps,
+        "tokens_per_s": round(rt.tokens_served / max(modeled, 1e-9), 2),
+        "mean_eff": round(rt.mean_efficiency(), 4),
+        "lb_adoptions": rt.lb_adoptions,
+        "host_syncs": rt.host_syncs,
+        "eff_trace": [[s, round(e, 4)] for s, e in rt.efficiency_trace],
+    }
 
-    n_ep_groups = 4  # experts per device group under EP
-    for strategy in ("heuristic", "work_counter"):
-        costs = expert_costs(stats, strategy)
-        lb = LoadBalancer(n_devices=n_ep_groups, interval=1, max_boxes_per_device=None)
-        naive = np.arange(cfg.n_experts) % n_ep_groups
-        e_before = efficiency(costs, naive, n_ep_groups)
-        lb.mapping = naive.copy()
-        new_mapping = lb.step(0, costs)
-        e_after = (
-            efficiency(costs, new_mapping, n_ep_groups) if new_mapping is not None else e_before
-        )
-        rows.append(
-            {
-                "name": f"moe_expert_dlb/{strategy}",
-                "us_per_call": round(step_us, 1),
-                "derived": {
-                    "tokens_per_expert": [int(t) for t in stats["tokens_per_expert"]],
-                    "efficiency_naive_placement": round(e_before, 4),
-                    "efficiency_dlb_placement": round(e_after, 4),
-                    "adopted": bool(new_mapping is not None),
-                    "modeled_ep_step_speedup": round(e_after / max(e_before, 1e-9), 3),
-                },
-            }
-        )
 
-    # the redistribution primitive itself (expert permutation) round-trips
-    perm = np.asarray(
-        LoadBalancer(n_devices=cfg.n_experts, interval=1).propose(
-            expert_costs(stats, "work_counter")
-        )
-    )
-    _ = apply_expert_permutation(moe_params, np.argsort(perm))
+def run(quick: bool = False):
+    """All rows: per-mode cells, per-config summaries (the gated rows),
+    and the null-traffic thrash guard."""
+    n_steps, interval = (40, 5) if quick else (80, 10)
+    rows = []
+    for cfg in _toys():
+        for n_dev in (1, 8):
+            cells = {}
+            for mode in MODES:
+                cell = _serve(cfg, mode, n_dev, n_steps, interval)
+                cells[mode] = cell
+                rows.append(
+                    {
+                        "name": f"moe_dlb/{cfg.name}/{n_dev}dev/{mode}",
+                        "us_per_call": round(cell["wall_us_per_step"], 1),
+                        "derived": {
+                            k: v for k, v in cell.items() if k != "wall_us_per_step"
+                        },
+                    }
+                )
+            summary = {}
+            for mode in MODES:
+                summary[f"tokens_per_s_{mode}"] = cells[mode]["tokens_per_s"]
+                summary[f"mean_eff_{mode}"] = cells[mode]["mean_eff"]
+            summary["dynamic_over_none"] = round(
+                cells["dynamic"]["tokens_per_s"]
+                / max(cells["none"]["tokens_per_s"], 1e-9),
+                3,
+            )
+            rows.append(
+                {
+                    "name": f"moe_dlb/{cfg.name}/{n_dev}dev/summary",
+                    "us_per_call": 0.0,
+                    "derived": summary,
+                }
+            )
+    # Thrash guard: uniform traffic must not trigger adoptions — the 10%
+    # gate is the only thing standing between DLB and permutation churn.
+    mixtral, _ = _toys()
+    null = _serve(mixtral, "dynamic", 8, n_steps, interval, null=True)
     rows.append(
         {
-            "name": "moe_expert_dlb/permutation_applied",
-            "us_per_call": 0.0,
-            "derived": {"ok": True},
+            "name": "moe_dlb/null_traffic/8dev/dynamic",
+            "us_per_call": round(null["wall_us_per_step"], 1),
+            "derived": {k: v for k, v in null.items() if k != "wall_us_per_step"},
         }
     )
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="short trace, CI smoke")
+    args = ap.parse_args()
+    import json
+
+    for r in run(quick=args.quick):
+        derived = {k: v for k, v in r["derived"].items() if k != "eff_trace"}
+        print(f"{r['name']:44s} {json.dumps(derived)}")
+
+
+if __name__ == "__main__":
+    main()

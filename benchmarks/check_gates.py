@@ -100,6 +100,33 @@ GATES: List[Gate] = [
     Gate("bench_scaling", "scaling/uniform_null/dynamic", "measured_speedup",
          ">=", 0.95,
          why="null case: enabling LB must not slow a balanced run down"),
+    # -- bench_moe_dlb: the serving lane (experts as slots) ---------------
+    Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/8dev/summary",
+         "tokens_per_s_static", ">=", "tokens_per_s_none",
+         why="static expert LB must not lose to no LB on skewed traffic"),
+    Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/8dev/summary",
+         "tokens_per_s_dynamic", ">=", "tokens_per_s_static",
+         why="dynamic expert LB must ride the hot-topic flip that static "
+             "misses (the serving Fig. 6b analogue)"),
+    Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/8dev/summary",
+         "mean_eff_none", "<=", "mean_eff_static",
+         why="Eq.-1 efficiency ordering E_none <= E_static under serving"),
+    Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/8dev/summary",
+         "mean_eff_static", "<=", "mean_eff_dynamic",
+         why="Eq.-1 efficiency ordering E_static <= E_dynamic under serving"),
+    Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/8dev/summary",
+         "dynamic_over_none", ">", 1.0,
+         why="the full loop must beat static expert blocks on skewed traffic"),
+    Gate("bench_moe_dlb", "moe_dlb/scout_toy/8dev/summary",
+         "tokens_per_s_dynamic", ">=", "tokens_per_s_none",
+         why="the loop must transfer to a top-1 + shared-expert MoE shape"),
+    Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/1dev/summary",
+         "mean_eff_dynamic", "==", 1.0,
+         why="one device: everything trivially balanced, nothing to adopt"),
+    Gate("bench_moe_dlb", "moe_dlb/null_traffic/8dev/dynamic",
+         "lb_adoptions", "==", 0,
+         why="near-uniform traffic: the 10% gate must refuse every "
+             "proposal (thrash guard — adoption is the expensive event)"),
 ]
 
 

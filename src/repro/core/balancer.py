@@ -191,6 +191,17 @@ class LoadBalancer:
         return None
 
     # ------------------------------------------------------------------
+    @property
+    def smoothed_costs(self) -> Optional[np.ndarray]:
+        """The EWMA-smoothed per-item cost vector as of the last LB round
+        (the in-situ signal the knapsack actually saw), or ``None`` before
+        the first round.  This is the workload-agnostic per-slot cost
+        surface of ``repro.dist.runtime_api.BalancedRuntime`` — per-box
+        work counters for the PIC runtimes, per-expert dispatched-slot
+        counts for ``repro.serve.ExpertRuntime``."""
+        state = self._smoother._state
+        return None if state is None else np.asarray(state, np.float64).copy()
+
     def force_rebalance(self) -> None:
         """Run the LB routine at the next opportunity and adopt any strict
         improvement, bypassing the threshold gate once.  Used after events

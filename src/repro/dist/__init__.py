@@ -12,13 +12,16 @@ data flow of one LB round, is in ``docs/architecture.md``):
     geometry as one XLA program per LB interval — ``shard_map`` over the
     box mesh, ``ppermute``-ring halo/emigration collectives, one
     device→host sync per interval (the production runtime).
-  * ``runtime_api`` — the contract both runtimes implement
-    (``DistributedPICRuntime``): one commit/adoption API
-    (``apply_mapping``), one capacity API (``update_capacities``), one
-    straggler loop (``StragglerLoop`` via ``attach_straggler_detector``),
-    and one interval-pipeline flag (``pipeline="sync"|"async"`` +
-    ``flush()``, validated by ``validate_pipeline`` — the async
-    double-buffered LB interval and its staleness contract).
+  * ``runtime_api`` — the runtime contracts.  ``BalancedRuntime`` is the
+    workload-agnostic balancer core (slots + in-situ per-slot costs, one
+    commit/adoption API (``apply_mapping``), one capacity API
+    (``update_capacities``), one straggler loop (``StragglerLoop`` via
+    ``attach_straggler_detector``), one interval-pipeline flag
+    (``pipeline="sync"|"async"`` + ``flush()``, validated by
+    ``validate_pipeline`` — the async double-buffered LB interval and its
+    staleness contract), and snapshot/restore hooks); it is also what
+    ``repro.serve.ExpertRuntime`` implements.  ``DistributedPICRuntime``
+    extends it with the PIC diagnostics both runtimes here expose.
   * ``collectives`` — the in-program exchange primitives:
     ``neighbor_exchange`` / ``neighbor_reduce`` (strip-only directional
     ``ppermute`` hops — the ``comm="neighbor"`` path), ``ring_all_gather``
@@ -54,6 +57,7 @@ from .faults import (
 )
 from .recovery import RecoveryError, RecoveryRunner
 from .runtime_api import (
+    BalancedRuntime,
     DistributedPICRuntime,
     StragglerLoop,
     restore_balancer,
@@ -74,6 +78,7 @@ from .straggler import StragglerDetector
 __all__ = [
     "BoxRuntime",
     "ShardedRuntime",
+    "BalancedRuntime",
     "DistributedPICRuntime",
     "StragglerLoop",
     "DeviceSet",

@@ -507,6 +507,16 @@ class BoxRuntime(_StragglerMixin):
     # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------
+    def n_slots(self) -> int:
+        """Balancer work items this runtime places: one slot per box
+        (the workload-agnostic ``BalancedRuntime`` surface)."""
+        return self.grid.n_boxes
+
+    def slot_costs(self) -> Optional[np.ndarray]:
+        """Smoothed per-box in-situ work-counter costs as of the last LB
+        round (``LoadBalancer.smoothed_costs``); ``None`` before it."""
+        return self.balancer.smoothed_costs
+
     def total_alive(self) -> int:
         """Alive particles across all boxes and species (host-side count
         maintained by the emigration exchange)."""

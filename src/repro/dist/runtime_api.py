@@ -1,4 +1,18 @@
-"""The contract both distributed PIC runtimes implement.
+"""The contract every balanced runtime implements.
+
+Two protocols, one loop.  :class:`BalancedRuntime` is the
+**workload-agnostic** core of the paper's technique: *slots* (work items —
+PIC boxes, MoE experts, request buckets) whose costs are measured in situ,
+a ``commit`` path (``apply_mapping``) that re-commits state under an
+adopted distribution mapping, a capacity API for heterogeneous devices, the
+straggler loop, the interval-pipeline flag, and snapshot/restore hooks.
+:class:`DistributedPICRuntime` extends it with the PIC-specific diagnostics
+(``total_alive``/``box_counts``/``devices_in_use``).
+
+Three runtimes satisfy :class:`BalancedRuntime` today — ``BoxRuntime`` and
+``ShardedRuntime`` (boxes as slots, deposition work counters as the in-situ
+cost) and ``repro.serve.ExpertRuntime`` (experts as slots, dispatched
+capacity-buffer slots as the cost, adoption as an expert permutation).
 
 ``repro.dist`` has two executions of the same paper loop —
 ``BoxRuntime`` (host-driven, one dispatch per box per step; the validation
@@ -46,6 +60,7 @@ from ..core import LoadBalancer
 from .straggler import StragglerDetector
 
 __all__ = [
+    "BalancedRuntime",
     "DistributedPICRuntime",
     "StragglerLoop",
     "device_work",
@@ -70,14 +85,20 @@ def validate_pipeline(pipeline: str) -> str:
 
 
 @runtime_checkable
-class DistributedPICRuntime(Protocol):
-    """Common surface of ``BoxRuntime`` and ``ShardedRuntime``."""
+class BalancedRuntime(Protocol):
+    """The workload-agnostic balancer contract (paper Lis. 2.1 decoupled
+    from PIC state): *slots* with in-situ per-slot costs, a commit path
+    for adopted mappings, capacities, the straggler loop, the interval
+    pipeline, and snapshot/restore.  ``BoxRuntime``, ``ShardedRuntime``
+    and ``repro.serve.ExpertRuntime`` all satisfy it; the workload decides
+    only what a slot *is* and how its cost is measured."""
 
     balancer: LoadBalancer
     pipeline: str  # "sync" | "async" (see validate_pipeline)
 
     def step(self) -> dict:
-        """Advance one PIC step (running the LB routine when due)."""
+        """Advance one step of the workload (running the LB routine when
+        due) and return that step's scalar diagnostics."""
         ...
 
     def run(self, n_steps: int) -> None:
@@ -109,6 +130,45 @@ class DistributedPICRuntime(Protocol):
         feed ``detector`` and its capacity vector feeds the balancer."""
         ...
 
+    def n_slots(self) -> int:
+        """Number of balancer work items (slots) this runtime places —
+        boxes for the PIC runtimes, experts for the serving runtime."""
+        ...
+
+    def slot_costs(self) -> Optional[np.ndarray]:
+        """The smoothed per-slot in-situ cost vector as of the last LB
+        round (``LoadBalancer.smoothed_costs``), or ``None`` before the
+        first round — the signal the knapsack actually saw, in slot
+        (work-item) order."""
+        ...
+
+    def snapshot(self) -> dict:
+        """Minimal recoverable state at the last committed interval
+        boundary, as a host pytree of numpy leaves in **slot-major**
+        (device-count independent) layout — box-major field tiles and
+        pooled particles for the PIC runtimes, expert-major stacked
+        weights for the serving runtime — plus sim time/step, the
+        committed mapping, balancer EWMA state, and runtime-specific
+        extras (adaptive ``mig_cap`` tables).  Flushes first, so an async
+        in-flight round is never captured — the snapshot *is* the commit
+        point."""
+        ...
+
+    def restore(self, snap: dict) -> None:
+        """Adopt a :meth:`snapshot` — possibly taken on a different device
+        count.  The checkpointed per-box populations are re-knapsacked onto
+        *this* runtime's device set (gate bypassed, capacity-aware,
+        locality-repaired where the comm mode wants it) and state is
+        re-committed under the new mapping."""
+        ...
+
+
+@runtime_checkable
+class DistributedPICRuntime(BalancedRuntime, Protocol):
+    """Common surface of ``BoxRuntime`` and ``ShardedRuntime``: the
+    workload-agnostic :class:`BalancedRuntime` contract plus the
+    PIC-specific diagnostics both runtimes expose."""
+
     def total_alive(self) -> int:
         """Alive particles across all boxes and species."""
         ...
@@ -119,24 +179,6 @@ class DistributedPICRuntime(Protocol):
 
     def devices_in_use(self) -> List[int]:
         """Distinct device ids currently holding box state."""
-        ...
-
-    def snapshot(self) -> dict:
-        """Minimal recoverable state at the last committed interval
-        boundary, as a host pytree of numpy leaves: field tiles and pooled
-        alive particles in **box-major** layout (device-count independent),
-        per-box counts, sim time/step, the committed slot→box mapping,
-        balancer EWMA state, and runtime-specific extras (adaptive
-        ``mig_cap`` tables).  Flushes first, so an async in-flight round is
-        never captured — the snapshot *is* the commit point."""
-        ...
-
-    def restore(self, snap: dict) -> None:
-        """Adopt a :meth:`snapshot` — possibly taken on a different device
-        count.  The checkpointed per-box populations are re-knapsacked onto
-        *this* runtime's device set (gate bypassed, capacity-aware,
-        locality-repaired where the comm mode wants it) and state is
-        re-committed under the new mapping."""
         ...
 
 

@@ -1301,6 +1301,16 @@ class ShardedRuntime(_StragglerMixin):
     # ------------------------------------------------------------------
     # observability (diagnostic fetches; never on the hot path)
     # ------------------------------------------------------------------
+    def n_slots(self) -> int:
+        """Balancer work items this runtime places: one slot per box
+        (the workload-agnostic ``BalancedRuntime`` surface)."""
+        return self.grid.n_boxes
+
+    def slot_costs(self) -> Optional[np.ndarray]:
+        """Smoothed per-box in-situ work-counter costs as of the last LB
+        round (``LoadBalancer.smoothed_costs``); ``None`` before it."""
+        return self.balancer.smoothed_costs
+
     def total_alive(self) -> int:
         """Alive particles across all boxes and species, from the last
         fetched interval history (flushes the pipeline so that history is

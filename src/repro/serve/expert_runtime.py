@@ -1,0 +1,369 @@
+"""MoE expert serving runtime: the paper's DLB loop with experts as slots.
+
+:class:`ExpertRuntime` is the third implementation of
+``repro.dist.runtime_api.BalancedRuntime`` — the same loop as the PIC
+runtimes with every PIC noun swapped for a serving noun:
+
+  ===================  ==============================================
+  PIC runtimes         ExpertRuntime
+  ===================  ==============================================
+  box                  expert (one balancer slot per expert)
+  deposition counters  dispatched capacity-buffer slots per expert
+                       (``moe`` stats ``slots_filled`` — the in-situ
+                       work counter; ``tokens_per_expert`` is the
+                       heuristic alternative, paper Sec. 4 analogue)
+  adoption = moving    adoption = permuting the stacked expert weights
+  box state            so each device's contiguous expert block holds
+                       the experts the knapsack assigned to it
+                       (``repro.models.moe.apply_expert_permutation``)
+  ===================  ==============================================
+
+Slots are **expert identities**, not positions: the balancer's mapping and
+EWMA cost state are indexed by original expert id, so smoothing keeps
+tracking the same expert across adoptions.  The physical layout is
+tracked separately (``slot_expert[pos] = expert id at position pos``) and
+re-derived from an adopted mapping by :func:`permutation_for_mapping`.
+Because ``apply_expert_permutation`` permutes the router's columns
+together with the weight stacks, an adoption changes *placement only* —
+the served function is preserved to f32 rounding (the serving analogue of
+"LB must not change the physics", asserted by
+``tests/test_expert_runtime.py``).
+
+Requires ``n_experts % n_devices == 0`` (experts-per-device EP blocks)
+and runs the knapsack with ``max_boxes_per_device=1.0``, whose
+count-preserving refinement guarantees exactly ``E/D`` experts per device
+— the invariant the block layout needs.
+
+The interval pipeline mirrors the PIC runtimes: ``pipeline="sync"``
+harvests the interval's accumulated per-expert counters (one
+device→host sync per interval) at the boundary and balances immediately;
+``pipeline="async"`` leaves them in flight and resolves them at the
+*next* boundary — one interval stale, never wrong.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import LoadBalancer
+from ..dist.runtime_api import (
+    _StragglerMixin,
+    device_work,
+    restore_balancer,
+    snapshot_balancer,
+    validate_pipeline,
+)
+from ..models.moe import apply_expert_permutation, moe
+
+__all__ = ["ExpertRuntime", "permutation_for_mapping", "COST_SOURCES"]
+
+#: the two per-expert cost signals (paper Sec. 4: in-situ vs heuristic)
+COST_SOURCES = ("work_counter", "heuristic")
+
+_STAT_KEY = {"work_counter": "slots_filled", "heuristic": "tokens_per_expert"}
+
+
+def permutation_for_mapping(
+    slot_expert: np.ndarray, mapping: np.ndarray, n_devices: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Turn an adopted expert→device ``mapping`` into the physical layout
+    change that realizes it.
+
+    ``slot_expert`` is the current layout (``slot_expert[pos]`` = original
+    expert id held at weight-stack position ``pos``).  The new layout puts
+    experts in device-major order (device 0's experts in positions
+    ``[0, E/D)``, …), stable by expert id within a device.  Returns
+    ``(perm, new_slot_expert)`` where ``perm`` is the argument for
+    ``apply_expert_permutation`` on the *current* params (position ``i``'s
+    content moves to position ``perm[i]``).  Raises if the mapping does
+    not give every device exactly ``E / n_devices`` experts — the equal
+    EP-block invariant.
+    """
+    slot_expert = np.asarray(slot_expert, np.int64)
+    mapping = np.asarray(mapping, np.int64)
+    n = len(mapping)
+    if n % n_devices != 0:
+        raise ValueError(f"{n} experts not divisible by {n_devices} devices")
+    counts = np.bincount(mapping, minlength=n_devices)
+    if not np.all(counts == n // n_devices):
+        raise ValueError(
+            f"mapping must give every device exactly {n // n_devices} "
+            f"experts, got counts {counts.tolist()}"
+        )
+    new_slot_expert = np.argsort(mapping, kind="stable")
+    pos_new = np.empty(n, np.int64)
+    pos_new[new_slot_expert] = np.arange(n)
+    perm = pos_new[slot_expert]
+    return perm, new_slot_expert
+
+
+class ExpertRuntime(_StragglerMixin):
+    """Serving-side balanced runtime: experts as slots, routed work as the
+    in-situ cost, adoption as an expert permutation (see module docstring).
+
+    Parameters
+    ----------
+    params, cfg:
+        MoE block parameters (``repro.models.moe.init_moe``) and the
+        ``ModelConfig`` they were built for.
+    traffic:
+        a ``repro.serve.TrafficGenerator`` supplying one batch per step.
+    n_devices:
+        modeled expert-parallel group size; must divide ``cfg.n_experts``.
+    cost_source:
+        ``"work_counter"`` (dispatched capacity-buffer slots — the in-situ
+        signal) or ``"heuristic"`` (router-intent token counts).
+    lb_enabled:
+        ``False`` = never balance (the ``none`` baseline mode); the
+        interval loads are still recorded for the efficiency trace.
+    static:
+        balance once at the first boundary, then freeze (paper's static
+        LB baseline; forwarded to the balancer).
+    """
+
+    def __init__(
+        self,
+        params: dict,
+        cfg,
+        traffic,
+        *,
+        n_devices: int,
+        lb_interval: int = 10,
+        improvement_threshold: float = 0.10,
+        cost_source: str = "work_counter",
+        lb_enabled: bool = True,
+        static: bool = False,
+        ema_alpha: float = 1.0,
+        pipeline: str = "sync",
+    ):
+        E = cfg.n_experts
+        if E <= 0:
+            raise ValueError("cfg.n_experts must be positive")
+        if E % n_devices != 0:
+            raise ValueError(
+                f"n_experts={E} must be divisible by n_devices={n_devices}"
+            )
+        if cost_source not in COST_SOURCES:
+            raise ValueError(
+                f"cost_source must be one of {COST_SOURCES}, got {cost_source!r}"
+            )
+        self.params = params
+        self.cfg = cfg
+        self.traffic = traffic
+        self.n_devices = n_devices
+        self.cost_source = cost_source
+        self.lb_enabled = lb_enabled
+        self.pipeline = validate_pipeline(pipeline)
+        self.balancer = LoadBalancer(
+            n_devices,
+            policy="knapsack",
+            interval=lb_interval,
+            improvement_threshold=improvement_threshold,
+            ema_alpha=ema_alpha,
+            max_boxes_per_device=1.0,  # count-preserving: exact E/D blocks
+            static=static,
+        )
+        # Initial physical layout: expert e at position e -> device-major
+        # blocks; the balancer mapping must describe the same placement.
+        self._slot_expert = np.arange(E, dtype=np.int64)
+        self.balancer.mapping = np.arange(E, dtype=np.int64) // (E // n_devices)
+
+        self._fwd = jax.jit(lambda p, x: moe(p, cfg, x))
+        self._acc = jnp.zeros(E, jnp.float32)  # device-side interval counters
+        self._pending: Optional[Tuple] = None  # (acc, mapping_used, step)
+        self.step_idx = 0
+        self.tokens_served = 0
+        self.host_syncs = 0
+        self.lb_adoptions = 0
+        self.interval_loads: List[np.ndarray] = []
+        self.efficiency_trace: List[Tuple[int, float]] = []
+
+    # -- the step loop --------------------------------------------------
+    def step(self) -> Dict[str, float]:
+        """Serve one traffic batch (running the LB routine when due) and
+        return this step's scalar diagnostics."""
+        x = self.traffic.batch(self.step_idx)
+        _out, stats = self._fwd(self.params, jnp.asarray(x))
+        # Per-position counters accumulate on device; NO host sync here.
+        self._acc = self._acc + stats[_STAT_KEY[self.cost_source]].astype(jnp.float32)
+        self.tokens_served += int(x.shape[0]) * int(x.shape[1])
+
+        # Measurement happens on the interval cadence even when the
+        # balancer itself is frozen (static-after-balance, lb_enabled=False)
+        # — the efficiency trace must cover every interval in every mode.
+        due = (
+            self.balancer.should_run(self.step_idx)
+            or self.step_idx % self.balancer.interval == 0
+        )
+        adopted = False
+        if due:
+            acc, self._acc = self._acc, jnp.zeros_like(self._acc)
+            measurement = (acc, self.balancer.mapping.copy(), self.step_idx)
+            if self.pipeline == "async":
+                adopted = self._resolve_pending()
+                self._pending = measurement
+            else:
+                adopted = self._lb_round(*measurement)
+        self.step_idx += 1
+        return {
+            "step": float(self.step_idx),
+            "tokens": float(x.shape[0] * x.shape[1]),
+            "adopted": adopted,
+        }
+
+    def run(self, n_steps: int) -> None:
+        """Serve ``n_steps`` traffic batches (LB rounds run when due)."""
+        for _ in range(n_steps):
+            self.step()
+
+    def flush(self) -> None:
+        """Resolve any deferred LB round (``pipeline="async"``) so every
+        measured interval has fed the balancer; no-op under ``"sync"``."""
+        self._resolve_pending()
+
+    # -- the LB round ---------------------------------------------------
+    def _harvest(self, acc) -> np.ndarray:
+        """ONE device→host sync: position counters -> per-expert costs."""
+        by_position = np.asarray(jax.device_get(acc), np.float64)
+        self.host_syncs += 1
+        by_expert = np.zeros_like(by_position)
+        by_expert[self._slot_expert] = by_position
+        return by_expert
+
+    def _lb_round(self, acc, mapping_used: np.ndarray, measured_step: int) -> bool:
+        costs = self._harvest(acc)
+        loads = device_work(costs, mapping_used, self.n_devices)
+        cmax = float(loads.max()) if loads.size else 0.0
+        eff = 1.0 if cmax <= 0.0 else float(loads.mean()) / cmax
+        self.interval_loads.append(loads)
+        self.efficiency_trace.append((measured_step, eff))
+        if not self.lb_enabled:
+            return False
+        self._observe_straggler(costs)
+        new_mapping = self.balancer.step(measured_step, costs)
+        if new_mapping is None:
+            return False
+        self._realize(new_mapping)
+        return True
+
+    def _resolve_pending(self) -> bool:
+        if self._pending is None:
+            return False
+        pending, self._pending = self._pending, None
+        return self._lb_round(*pending)
+
+    def _realize(self, mapping: np.ndarray) -> None:
+        """Commit an adopted expert→device mapping: permute the stacked
+        expert weights (and router columns) into device-major blocks."""
+        perm, new_slot_expert = permutation_for_mapping(
+            self._slot_expert, mapping, self.n_devices
+        )
+        if not np.array_equal(perm, np.arange(len(perm))):
+            self.params = apply_expert_permutation(self.params, perm)
+        self._slot_expert = new_slot_expert
+        self.lb_adoptions += 1
+
+    # -- BalancedRuntime surface ---------------------------------------
+    def n_slots(self) -> int:
+        """Balancer work items this runtime places: one slot per expert
+        (the workload-agnostic ``BalancedRuntime`` surface)."""
+        return self.cfg.n_experts
+
+    def slot_costs(self) -> Optional[np.ndarray]:
+        """Smoothed per-expert in-situ costs as of the last LB round
+        (``LoadBalancer.smoothed_costs``, expert-id order); ``None``
+        before it."""
+        return self.balancer.smoothed_costs
+
+    def apply_mapping(self, new_mapping) -> None:
+        """Adopt an externally-decided expert→device mapping and permute
+        the expert weights to realize it (same commit path as
+        balancer-driven adoption)."""
+        new_mapping = np.asarray(new_mapping, np.int64)
+        if new_mapping.shape != (self.cfg.n_experts,):
+            raise ValueError(
+                f"mapping must have shape ({self.cfg.n_experts},)"
+            )
+        if new_mapping.min() < 0 or new_mapping.max() >= self.n_devices:
+            raise ValueError("mapping names a device outside this runtime")
+        self._realize(new_mapping)
+        self.balancer.mapping = new_mapping.copy()
+
+    def update_capacities(self, capacities) -> None:
+        """Feed a per-device capacity vector into the knapsack and force
+        the next LB round to rebalance against it (straggler-replica
+        mitigation: a slow replica serves fewer experts)."""
+        self.balancer.set_capacities(
+            None if capacities is None else np.asarray(capacities, np.float64)
+        )
+        self.balancer.force_rebalance()
+
+    # -- snapshot / restore --------------------------------------------
+    def snapshot(self) -> dict:
+        """Device-count-independent state at the last committed boundary:
+        params permuted back to **expert-major** order (numpy leaves), the
+        committed expert→device mapping, step/token counters, and the
+        balancer EWMA state.  Flushes first — the snapshot is the commit
+        point, an async in-flight round is never captured."""
+        self.flush()
+        params = self.params
+        if not np.array_equal(self._slot_expert, np.arange(len(self._slot_expert))):
+            params = apply_expert_permutation(params, self._slot_expert)
+        return {
+            "params": jax.tree_util.tree_map(
+                lambda a: np.asarray(jax.device_get(a)), params
+            ),
+            "mapping": self.balancer.mapping.copy(),
+            "step": self.step_idx,
+            "tokens_served": self.tokens_served,
+            "balancer": snapshot_balancer(self.balancer),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Adopt a :meth:`snapshot` — possibly taken on a different device
+        count.  Expert-major params are reloaded, the balancer EWMA state
+        restored, and the experts are re-knapsacked onto *this* runtime's
+        device set from the restored smoothed costs (round-robin blocks
+        when no costs survived); the resulting mapping is committed
+        through the same permutation path as a live adoption."""
+        E = self.cfg.n_experts
+        self.params = jax.tree_util.tree_map(jnp.asarray, snap["params"])
+        self._slot_expert = np.arange(E, dtype=np.int64)
+        self.balancer.mapping = np.arange(E, dtype=np.int64) // (E // self.n_devices)
+        restore_balancer(self.balancer, snap.get("balancer", {}), n_boxes=E)
+        costs = self.balancer.smoothed_costs
+        if costs is not None and self.lb_enabled:
+            proposed = self.balancer.propose(costs)
+            self._realize(proposed)
+            self.balancer.mapping = proposed
+        else:
+            self.balancer.force_rebalance()
+        self.step_idx = int(snap["step"])
+        self.tokens_served = int(snap["tokens_served"])
+        self._acc = jnp.zeros(E, jnp.float32)
+        self._pending = None
+
+    # -- diagnostics ----------------------------------------------------
+    def expert_placement(self) -> np.ndarray:
+        """Current physical layout: ``expert_placement()[pos]`` is the
+        original expert id whose weights sit at stack position ``pos``
+        (device ``pos // (E/D)``)."""
+        return self._slot_expert.copy()
+
+    def mean_efficiency(self) -> float:
+        """Mean Eq.-1 efficiency across all measured intervals so far
+        (1.0 when nothing has been measured yet)."""
+        if not self.efficiency_trace:
+            return 1.0
+        return float(np.mean([e for _, e in self.efficiency_trace]))
+
+    def modeled_interval_time(self) -> float:
+        """Modeled serving walltime: per interval, the max per-device load
+        under the mapping that served it (bulk-synchronous EP — everyone
+        waits for the hottest replica), summed over intervals.  The cost
+        unit is routed work, so mode comparisons (none/static/dynamic) on
+        the same traffic are apples-to-apples."""
+        return float(sum(float(l.max()) for l in self.interval_loads))

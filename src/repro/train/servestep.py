@@ -4,9 +4,14 @@
 ``long_*`` benchmark shapes: one new token given a cache holding ``seq_len``
 prior context.  ``make_prefill_step`` covers ``prefill_*`` shapes.
 
-Serving-level DLB (DESIGN.md §4): ``RequestBalancer`` treats request
-*buckets* as work items — measured per-bucket decode/prefill times feed the
-paper's LoadBalancer to assign buckets to data-parallel replicas.
+Serving-level DLB (docs/architecture.md §"The serving layer"):
+``RequestBalancer`` treats request *buckets* as work items — measured
+per-bucket decode/prefill times feed the paper's LoadBalancer to assign
+buckets to data-parallel replicas.  It is the bucket-level sibling of
+``repro.serve.ExpertRuntime`` (experts as work items); both run the same
+measure → smooth → knapsack → gate loop, and
+``repro.serve.TrafficGenerator.bucket_costs`` produces the bucket costs
+the serving tests drive it with.
 """
 from __future__ import annotations
 
@@ -23,6 +28,10 @@ __all__ = ["make_serve_step", "make_prefill_step", "RequestBalancer"]
 
 
 def make_serve_step(cfg: ModelConfig):
+    """Build the single-token decode step (greedy argmax over the real
+    vocab) for the ``decode_*``/``long_*`` serving shapes: maps
+    ``(params, token, state) -> (next_token, new_state)``."""
+
     def serve_step(params, token, state):
         logits, new_state = decode_step(params, cfg, token, state)
         next_token = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
@@ -32,6 +41,9 @@ def make_serve_step(cfg: ModelConfig):
 
 
 def make_prefill_step(cfg: ModelConfig):
+    """Build the prefill step for the ``prefill_*`` serving shapes: runs
+    the full prompt through the model and returns the primed KV caches."""
+
     def prefill_step(params, batch):
         return prefill(params, cfg, batch)
 
@@ -48,6 +60,10 @@ class RequestBalancer:
         )
 
     def assign(self, step: int, bucket_costs: np.ndarray) -> np.ndarray:
+        """Feed one round of measured per-bucket costs and return the
+        (possibly re-adopted) bucket→replica mapping; between LB rounds
+        and under the 10% gate the previous mapping is returned
+        unchanged."""
         self.lb.ensure_mapping(len(bucket_costs))
         new = self.lb.step(step, bucket_costs)
         return self.lb.mapping if new is None else new

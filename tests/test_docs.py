@@ -36,6 +36,9 @@ DOCUMENTED_API = [
     "repro.dist.recovery",
     "repro.dist.faults",
     "repro.ckpt.checkpoint",
+    "repro.serve.expert_runtime",
+    "repro.serve.traffic",
+    "repro.train.servestep",
 ]
 
 
@@ -145,6 +148,25 @@ def test_architecture_doc_covers_the_scenario_registry():
         assert needle in text, f"docs/architecture.md must cover {needle!r}"
 
 
+def test_architecture_doc_covers_the_serving_layer():
+    """The serving section: the workload-agnostic protocol and the
+    boxes ↔ experts ↔ buckets slot correspondence, the permutation
+    commit path, and the traffic drift the lane is tested against."""
+    text = open(os.path.join(DOCS, "architecture.md")).read()
+    for needle in (
+        "The serving layer",
+        "BalancedRuntime",
+        "ExpertRuntime",
+        "RequestBalancer",
+        "TrafficGenerator",
+        "apply_expert_permutation",
+        "experts as slots",
+        "hot-topic flip",
+        "bench_moe_dlb",
+    ):
+        assert needle in text, f"docs/architecture.md must cover {needle!r}"
+
+
 def test_benchmarks_doc_covers_the_scaling_matrix():
     """The bench_scaling section must document the artifact schema and how
     to read the fraction-of-predicted statistic, including why the CI gate
@@ -192,6 +214,9 @@ TUNING_KNOBS = {
     "max_retries": "bench_recovery",
     "backoff_s": "bench_recovery",
     "min_devices": "bench_recovery",
+    "cost_source": "bench_moe_dlb",
+    "flip_every": "bench_moe_dlb",
+    "burst_gain": "bench_moe_dlb",
 }
 
 
@@ -271,6 +296,19 @@ def test_readme_quickstart_recipe():
         "docs/benchmarks.md",
     ):
         assert needle in text, f"README.md quickstart must include {needle!r}"
+
+
+def test_readme_serving_quickstart():
+    """The serving lane has its own quickstart: build traffic, build the
+    expert runtime, serve, read the efficiency trace."""
+    text = open(os.path.join(ROOT, "README.md")).read()
+    for needle in (
+        "ExpertRuntime",
+        "TrafficGenerator",
+        "bench_moe_dlb",
+        "mean_efficiency",
+    ):
+        assert needle in text, f"README.md serving quickstart must include {needle!r}"
 
 
 def test_roadmap_points_at_architecture_doc():

@@ -1,0 +1,106 @@
+"""Hypothesis property tests for the serving DLB lane.
+
+This module (and only this module) needs the optional ``hypothesis`` dev
+dep — the plain serving tests live in ``test_serving_dlb.py`` /
+``test_expert_runtime.py`` and always run.  Properties:
+
+  * the request balancer's knapsack never loses to round-robin on any
+    cost vector;
+  * under *any* seeded traffic trace, one DLB round leaves the expert
+    runtime's placement no worse (on the costs the balancer saw) than
+    the placement it started with — the adoption gate's contract;
+  * the MoE forward is invariant (to f32 rounding) under *any* expert
+    permutation, not just the ones the knapsack happens to propose.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; plain tests live elsewhere
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import efficiency, round_robin_mapping
+from repro.models.common import ModelConfig
+from repro.models.moe import apply_expert_permutation, init_moe, moe
+from repro.serve import ExpertRuntime, TrafficConfig, TrafficGenerator
+from repro.train.servestep import RequestBalancer
+
+_CFG = ModelConfig(
+    name="prop-toy", kind="moe", n_layers=1, d_model=16, n_heads=2,
+    n_kv_heads=2, head_dim=8, d_ff=32, vocab=64, n_experts=8, top_k=2,
+    param_dtype=jnp.float32,
+)
+_PARAMS, _ = init_moe(jax.random.PRNGKey(0), _CFG)
+
+
+@given(
+    st.lists(st.floats(0.1, 100.0, allow_nan=False), min_size=4, max_size=40),
+    st.integers(2, 8),
+)
+@settings(max_examples=50, deadline=None)
+def test_request_balancer_never_worse_than_round_robin(costs, n_replicas):
+    costs = np.asarray(costs)
+    rb = RequestBalancer(n_replicas=n_replicas, interval=1)
+    mapping = rb.assign(0, costs)
+    rr = round_robin_mapping(len(costs), n_replicas)
+    assert efficiency(costs, mapping, n_replicas) >= efficiency(costs, rr, n_replicas) - 1e-9
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    skew=st.floats(0.0, 3.0, allow_nan=False),
+    n_topics=st.integers(2, 8),
+)
+@settings(max_examples=15, deadline=None)
+def test_one_dlb_round_never_worse_than_starting_placement(seed, skew, n_topics):
+    """Under any seeded traffic trace, one DLB round leaves the placement
+    no worse on the costs that round measured: either the 10% gate
+    refused (mapping unchanged, trivially equal) or the adopted proposal
+    beat the current efficiency.  One round exactly, because after a
+    later *non-adopting* round the EWMA has moved past the mapping and
+    the comparison would no longer be against what the knapsack saw."""
+    tc = TrafficConfig(seed=seed, d_model=_CFG.d_model, batch=1, seq=16,
+                       n_topics=n_topics, skew=skew, flip_every=3, burst_every=4)
+    rt = ExpertRuntime(_PARAMS, _CFG, TrafficGenerator(tc),
+                       n_devices=4, lb_interval=100)
+    start = rt.balancer.mapping.copy()
+    rt.run(1)  # exactly the step-0 boundary round
+    costs = rt.slot_costs()
+    assert costs is not None
+    assert efficiency(costs, rt.balancer.mapping, 4) >= efficiency(costs, start, 4) - 1e-9
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    skew=st.floats(0.0, 3.0, allow_nan=False),
+)
+@settings(max_examples=10, deadline=None)
+def test_gate_never_adopts_a_non_improvement(seed, skew):
+    """Across a whole drifting trace, every adoption event's proposed
+    efficiency beat the efficiency it replaced — the gate's invariant,
+    regardless of what the traffic did."""
+    tc = TrafficConfig(seed=seed, d_model=_CFG.d_model, batch=1, seq=16,
+                       n_topics=4, skew=skew, flip_every=3, burst_every=4)
+    rt = ExpertRuntime(_PARAMS, _CFG, TrafficGenerator(tc),
+                       n_devices=4, lb_interval=2)
+    rt.run(8)
+    assert rt.balancer.events, "LB rounds must have run"
+    for e in rt.balancer.events:
+        if e.adopted:
+            assert e.proposed_efficiency >= e.current_efficiency
+
+
+@given(perm=st.permutations(list(range(_CFG.n_experts))))
+@settings(max_examples=15, deadline=None)
+def test_moe_invariant_under_any_expert_permutation(perm):
+    """Physics invariance, serving edition: any expert permutation (not
+    just knapsack-proposed ones) preserves the served function to f32
+    rounding, because the router columns move with the weight stacks."""
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((1, 8, _CFG.d_model)), jnp.float32
+    )
+    base, _ = moe(_PARAMS, _CFG, x)
+    permuted = apply_expert_permutation(_PARAMS, np.asarray(perm))
+    out, _ = moe(permuted, _CFG, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-5)
