@@ -441,8 +441,13 @@ class BoxRuntime(_StragglerMixin):
         adopted = False
         if self.balancer.should_run(self.step_idx):
             if self.pipeline == "async":
+                # capture the mapping BEFORE resolving (the resolve may
+                # adopt): these counters accumulated under it
+                mapping_used = self.balancer.mapping.copy()
                 adopted = self._resolve_pending_lb()
-                self._pending_lb = (work_dev, self._counts.copy(), self.step_idx)
+                self._pending_lb = (
+                    work_dev, self._counts.copy(), mapping_used, self.step_idx
+                )
             else:
                 costs = np.asarray(jax.device_get(work_dev), np.float64)
                 adopted = self._lb_round(costs, self._counts, self.step_idx)
@@ -455,11 +460,18 @@ class BoxRuntime(_StragglerMixin):
             "adopted": adopted,
         }
 
-    def _lb_round(self, costs: np.ndarray, counts: np.ndarray, step: int) -> bool:
+    def _lb_round(
+        self,
+        costs: np.ndarray,
+        counts: np.ndarray,
+        step: int,
+        mapping_used: Optional[np.ndarray] = None,
+    ) -> bool:
         """One balancer invocation at measurement boundary ``step`` +
         adoption placement; shared by the sync path and the deferred
-        (async) resolution."""
-        self._observe_straggler(costs)
+        (async) resolution, which passes the ``mapping_used`` its counters
+        accumulated under (the current mapping may have adopted since)."""
+        self._observe_straggler(costs, mapping_used)
         old = self.balancer.mapping.copy()
         new_mapping = self.balancer.step(
             step,
@@ -479,10 +491,10 @@ class BoxRuntime(_StragglerMixin):
         exactly one interval after the measurements."""
         if self._pending_lb is None:
             return False
-        work_dev, counts, measured_step = self._pending_lb
+        work_dev, counts, mapping_used, measured_step = self._pending_lb
         self._pending_lb = None
         costs = np.asarray(jax.device_get(work_dev), np.float64)
-        return self._lb_round(costs, counts, measured_step)
+        return self._lb_round(costs, counts, measured_step, mapping_used)
 
     def flush(self) -> None:
         """Resolve any deferred LB round (``pipeline="async"``) so every

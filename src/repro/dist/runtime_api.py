@@ -283,7 +283,11 @@ class _StragglerMixin:
 
     The runtime calls ``_observe_straggler(work_per_box)`` at each LB
     round, *before* offering costs to the balancer, so a freshly-updated
-    capacity vector shapes the same round's proposal.
+    capacity vector shapes the same round's proposal.  A deferred round
+    (``pipeline="async"``) must pass the ``mapping`` its work accumulated
+    under — by resolve time an adoption may have moved slots, and
+    crediting stale work through the *current* mapping would skew the
+    per-device capacity EWMA the knapsack consumes.
     """
 
     _straggler_loop: Optional[StragglerLoop] = None
@@ -302,7 +306,9 @@ class _StragglerMixin:
         self._straggler_time_fn = time_fn
         self._straggler_t0 = time.perf_counter()
 
-    def _observe_straggler(self, work_per_box: np.ndarray) -> None:
+    def _observe_straggler(
+        self, work_per_box: np.ndarray, mapping: Optional[np.ndarray] = None
+    ) -> None:
         if self._straggler_loop is None:
             return
         now = time.perf_counter()
@@ -313,6 +319,6 @@ class _StragglerMixin:
             times = np.asarray(self._straggler_time_fn(self, elapsed), np.float64)
         else:
             times = np.full(n, elapsed)
-        self._straggler_loop.observe(
-            device_work(work_per_box, self.balancer.mapping, n), times
-        )
+        if mapping is None:
+            mapping = self.balancer.mapping
+        self._straggler_loop.observe(device_work(work_per_box, mapping, n), times)

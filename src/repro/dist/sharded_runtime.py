@@ -1106,7 +1106,9 @@ class ShardedRuntime(_StragglerMixin):
             "lb_due": self.balancer.should_run(self.step_idx),
             # histories are slot-ordered under the *dispatch-time* mapping;
             # the harvester must not read them through a later slot_box
+            # (nor credit their work through a later box->device mapping)
             "slot_box": self._slot_box.copy(),
+            "mapping": self.balancer.mapping.copy(),
             "mig_keys": self._mig_keys(),
         }
 
@@ -1166,7 +1168,7 @@ class ShardedRuntime(_StragglerMixin):
         if meta["lb_due"]:
             # row 0 is the round-boundary step — what per-step execution
             # would have fed the balancer
-            self._observe_straggler(work_box[0])
+            self._observe_straggler(work_box[0], meta["mapping"])
             new_mapping = self.balancer.step(
                 meta["step_idx"],
                 work_box[0],

@@ -173,12 +173,16 @@ class ExpertRuntime(_StragglerMixin):
 
         self._fwd = jax.jit(lambda p, x: moe(p, cfg, x))
         self._acc = jnp.zeros(E, jnp.float32)  # device-side interval counters
-        self._pending: Optional[Tuple] = None  # (acc, mapping_used, step)
+        # (acc, mapping_used, slot_expert_used, step): a deferred measurement
+        # must carry the mapping AND physical layout it accumulated under —
+        # an adoption at the intervening boundary changes both.
+        self._pending: Optional[Tuple] = None
         self.step_idx = 0
         self.tokens_served = 0
         self.host_syncs = 0
         self.lb_adoptions = 0
         self.interval_loads: List[np.ndarray] = []
+        self.interval_costs: List[np.ndarray] = []
         self.efficiency_trace: List[Tuple[int, float]] = []
 
     # -- the step loop --------------------------------------------------
@@ -201,7 +205,12 @@ class ExpertRuntime(_StragglerMixin):
         adopted = False
         if due:
             acc, self._acc = self._acc, jnp.zeros_like(self._acc)
-            measurement = (acc, self.balancer.mapping.copy(), self.step_idx)
+            measurement = (
+                acc,
+                self.balancer.mapping.copy(),
+                self._slot_expert.copy(),
+                self.step_idx,
+            )
             if self.pipeline == "async":
                 adopted = self._resolve_pending()
                 self._pending = measurement
@@ -225,24 +234,33 @@ class ExpertRuntime(_StragglerMixin):
         self._resolve_pending()
 
     # -- the LB round ---------------------------------------------------
-    def _harvest(self, acc) -> np.ndarray:
-        """ONE device→host sync: position counters -> per-expert costs."""
+    def _harvest(self, acc, slot_expert_used: np.ndarray) -> np.ndarray:
+        """ONE device→host sync: position counters -> per-expert costs,
+        decoded with the layout the counters accumulated under (a deferred
+        measurement may predate the layout adopted at the last boundary)."""
         by_position = np.asarray(jax.device_get(acc), np.float64)
         self.host_syncs += 1
         by_expert = np.zeros_like(by_position)
-        by_expert[self._slot_expert] = by_position
+        by_expert[np.asarray(slot_expert_used)] = by_position
         return by_expert
 
-    def _lb_round(self, acc, mapping_used: np.ndarray, measured_step: int) -> bool:
-        costs = self._harvest(acc)
+    def _lb_round(
+        self,
+        acc,
+        mapping_used: np.ndarray,
+        slot_expert_used: np.ndarray,
+        measured_step: int,
+    ) -> bool:
+        costs = self._harvest(acc, slot_expert_used)
         loads = device_work(costs, mapping_used, self.n_devices)
         cmax = float(loads.max()) if loads.size else 0.0
         eff = 1.0 if cmax <= 0.0 else float(loads.mean()) / cmax
         self.interval_loads.append(loads)
+        self.interval_costs.append(costs.copy())
         self.efficiency_trace.append((measured_step, eff))
         if not self.lb_enabled:
             return False
-        self._observe_straggler(costs)
+        self._observe_straggler(costs, mapping_used)
         new_mapping = self.balancer.step(measured_step, costs)
         if new_mapping is None:
             return False
@@ -255,16 +273,20 @@ class ExpertRuntime(_StragglerMixin):
         pending, self._pending = self._pending, None
         return self._lb_round(*pending)
 
-    def _realize(self, mapping: np.ndarray) -> None:
+    def _realize(self, mapping: np.ndarray, *, count: bool = True) -> None:
         """Commit an adopted expert→device mapping: permute the stacked
-        expert weights (and router columns) into device-major blocks."""
+        expert weights (and router columns) into device-major blocks.
+        ``count=False`` (the restore path) keeps ``lb_adoptions`` an
+        honest live-adoption counter — the null-traffic thrash gate and
+        benchmark rows read it."""
         perm, new_slot_expert = permutation_for_mapping(
             self._slot_expert, mapping, self.n_devices
         )
         if not np.array_equal(perm, np.arange(len(perm))):
             self.params = apply_expert_permutation(self.params, perm)
         self._slot_expert = new_slot_expert
-        self.lb_adoptions += 1
+        if count:
+            self.lb_adoptions += 1
 
     # -- BalancedRuntime surface ---------------------------------------
     def n_slots(self) -> int:
@@ -326,9 +348,13 @@ class ExpertRuntime(_StragglerMixin):
         """Adopt a :meth:`snapshot` — possibly taken on a different device
         count.  Expert-major params are reloaded, the balancer EWMA state
         restored, and the experts are re-knapsacked onto *this* runtime's
-        device set from the restored smoothed costs (round-robin blocks
-        when no costs survived); the resulting mapping is committed
-        through the same permutation path as a live adoption."""
+        device set from the restored smoothed costs; when no costs
+        survived (or balancing is disabled) the snapshot's committed
+        mapping is realized instead, falling back to round-robin blocks
+        only when it does not fit this runtime's device count.  The
+        resulting mapping is committed through the same permutation path
+        as a live adoption (``lb_adoptions`` is not incremented — restore
+        is recovery, not an adoption)."""
         E = self.cfg.n_experts
         self.params = jax.tree_util.tree_map(jnp.asarray, snap["params"])
         self._slot_expert = np.arange(E, dtype=np.int64)
@@ -337,9 +363,21 @@ class ExpertRuntime(_StragglerMixin):
         costs = self.balancer.smoothed_costs
         if costs is not None and self.lb_enabled:
             proposed = self.balancer.propose(costs)
-            self._realize(proposed)
+            self._realize(proposed, count=False)
             self.balancer.mapping = proposed
         else:
+            committed = np.asarray(snap.get("mapping", ()), np.int64)
+            if (
+                committed.shape == (E,)
+                and committed.min() >= 0
+                and committed.max() < self.n_devices
+                and np.all(
+                    np.bincount(committed, minlength=self.n_devices)
+                    == E // self.n_devices
+                )
+            ):
+                self._realize(committed, count=False)
+                self.balancer.mapping = committed.copy()
             self.balancer.force_rebalance()
         self.step_idx = int(snap["step"])
         self.tokens_served = int(snap["tokens_served"])

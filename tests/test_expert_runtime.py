@@ -247,10 +247,31 @@ def test_snapshot_restores_across_device_counts():
     assert rt2.tokens_served == rt.tokens_served
     counts = np.bincount(rt2.balancer.mapping, minlength=4)
     assert np.all(counts == CFG.n_experts // 4)
+    assert rt2.lb_adoptions == 0  # restore is recovery, not adoption
     # the restored smoothed costs shaped the new placement
     assert efficiency(rt2.slot_costs(), rt2.balancer.mapping, 4) >= efficiency(
         rt2.slot_costs(), np.arange(CFG.n_experts) // (CFG.n_experts // 4), 4
     ) - 1e-9
+
+
+def test_restore_without_costs_keeps_committed_placement():
+    """When no smoothed costs survive the snapshot and the device count
+    matches, restore must realize the snapshot's committed mapping rather
+    than silently resetting placement to round-robin blocks."""
+    rt = _runtime(_skewed_traffic())
+    rt.run(12)
+    assert rt.lb_adoptions >= 1
+    snap = rt.snapshot()
+    snap["balancer"] = {}  # the EWMA state did not survive
+    rt2 = _runtime(_skewed_traffic(), lb_enabled=False)
+    rt2.restore(snap)
+    np.testing.assert_array_equal(rt2.balancer.mapping, snap["mapping"])
+    np.testing.assert_array_equal(rt2.expert_placement(), rt.expert_placement())
+    assert rt2.lb_adoptions == 0
+    x = jnp.asarray(_skewed_traffic(seed=96).batch(0))
+    before, _ = moe(rt.params, CFG, x)
+    after, _ = moe(rt2.params, CFG, x)
+    np.testing.assert_allclose(np.asarray(after), np.asarray(before), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -278,8 +299,9 @@ def test_async_defers_harvest_by_one_interval_and_flush_drains():
 
 
 def test_async_matches_sync_measurements_one_interval_late():
-    """Staleness contract: async harvests the same per-interval costs as
-    sync (the traffic is seeded), just one boundary later."""
+    """Staleness contract, frozen-layout case: async harvests the same
+    per-interval costs as sync (the traffic is seeded), just one boundary
+    later."""
     a = _runtime(_skewed_traffic(), pipeline="sync", lb_enabled=False)
     b = _runtime(_skewed_traffic(), pipeline="async", lb_enabled=False)
     a.run(11)
@@ -290,6 +312,26 @@ def test_async_matches_sync_measurements_one_interval_late():
     assert len(a.interval_loads) == len(b.interval_loads)
     for la, lb_ in zip(a.interval_loads, b.interval_loads):
         np.testing.assert_allclose(la, lb_)
+
+
+def test_async_matches_sync_measurements_under_adoptions():
+    """Staleness contract, the non-trivial case: with adoptions forced
+    (improvement threshold 0) a deferred measurement must be decoded with
+    the mapping AND physical layout it accumulated under — per-expert
+    costs (which are layout-invariant, being counts per expert *id*) must
+    match sync exactly for every measured interval, even though an
+    adoption landed at the intermediate boundary."""
+    kw = dict(improvement_threshold=0.0, ema_alpha=0.5)
+    a = _runtime(_skewed_traffic(flip_every=8), pipeline="sync", **kw)
+    b = _runtime(_skewed_traffic(flip_every=8), pipeline="async", **kw)
+    a.run(26)
+    b.run(26)
+    b.flush()
+    assert a.lb_adoptions >= 2  # the layout really changed mid-run
+    assert b.lb_adoptions >= 2
+    assert len(a.interval_costs) == len(b.interval_costs)
+    for ca, cb in zip(a.interval_costs, b.interval_costs):
+        np.testing.assert_allclose(ca, cb)
 
 
 def test_invalid_construction_rejected():
