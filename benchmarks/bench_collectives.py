@@ -14,7 +14,14 @@ Bytes come from the committed exchange plan (``ShardedRuntime.comm_stats``
 so the numbers are exact, backend-independent, and identical to what the
 program ships on real links.  Each configuration is also stepped for one
 LB interval to keep the accounting honest (the plan it reports is the plan
-that ran), with ``steps_per_s`` as a side read-out.  Run:
+that ran), with ``steps_per_s`` as a side read-out.
+
+The ``collectives/overlap/*`` rows measure the split-phase interval
+program (``overlap=True``) against the serial reference on the same
+problem: steps/s, the structural exposed-comm fraction of the compiled
+HLO (``hlo_analysis.overlap_analysis``) and a physics-equality bit —
+``check_gates`` requires overlapped exposure <= serial and the physics to
+match.  Run:
 
     REPRO_HOST_DEVICES=8 PYTHONPATH=src python benchmarks/run.py --only bench_collectives
 """
@@ -73,6 +80,82 @@ def _measure(comm: str, make, n_devices: int, interval: int) -> Dict:
     }
 
 
+def _overlap_rows(n_devices: int, interval: int) -> List[Dict]:
+    """Split-phase (overlap=True) vs serial: steps/s, structural
+    exposed-comm fraction, physics equality."""
+    try:  # package mode (benchmarks.run) vs script mode (python bench_*.py)
+        from .hlo_analysis import overlap_analysis
+    except ImportError:  # pragma: no cover - script mode
+        from hlo_analysis import overlap_analysis
+
+    import numpy as np
+
+    from repro.dist import ShardedRuntime
+    from repro.pic import laser_ion_problem
+
+    rows: List[Dict] = []
+    per_mode: Dict[bool, Dict] = {}
+    fields: Dict[bool, "np.ndarray"] = {}
+    alive: Dict[bool, int] = {}
+    for overlap in (False, True):
+        rt = ShardedRuntime(
+            laser_ion_problem(nz=64, nx=64, box_cells=16, ppc=2, seed=0),
+            n_devices,
+            lb_interval=interval,
+            comm="neighbor",
+            overlap=overlap,
+            layout="row",
+            improvement_threshold=1e9,
+            mig_cap=256,
+            adaptive_mig=False,
+        )
+        oa = overlap_analysis(rt.interval_hlo())
+        rt.run(interval)  # compile + warm
+        t0 = time.perf_counter()
+        rt.run(interval)
+        wall = time.perf_counter() - t0
+        fields[overlap] = np.stack([np.asarray(c) for c in rt.fields])
+        alive[overlap] = rt.total_alive()
+        mode = "overlapped" if overlap else "serial"
+        per_mode[overlap] = {
+            "steps_per_s": round(interval / wall, 2),
+            "exposed_comm_fraction": oa.exposed_comm_fraction,
+            "n_collectives": len(oa.collectives),
+            "n_async_pairs": oa.n_async_pairs,
+            "async_pairs_spanning_compute": oa.async_pairs_spanning_compute,
+        }
+        rows.append(
+            {
+                "name": f"collectives/overlap/{mode}",
+                "us_per_call": round(1e6 * wall / interval, 1),
+                "derived": {"n_devices": n_devices, **per_mode[overlap]},
+            }
+        )
+    scale = max(float(np.abs(fields[False]).max()), 1e-30)
+    max_diff = float(np.abs(fields[True] - fields[False]).max())
+    rows.append(
+        {
+            "name": "collectives/overlap/compare",
+            "us_per_call": 0.0,
+            "derived": {
+                "n_devices": n_devices,
+                "exposed_comm_fraction_serial": per_mode[False]["exposed_comm_fraction"],
+                "exposed_comm_fraction_overlap": per_mode[True]["exposed_comm_fraction"],
+                "overlap_steps_over_serial": round(
+                    per_mode[True]["steps_per_s"]
+                    / max(per_mode[False]["steps_per_s"], 1e-9),
+                    3,
+                ),
+                "field_max_rel_diff": max_diff / scale,
+                "physics_match": bool(
+                    max_diff <= 1e-5 * scale and alive[True] == alive[False]
+                ),
+            },
+        }
+    )
+    return rows
+
+
 def run(quick: bool = False) -> List[Dict]:
     n_devices = max(d for d in (1, 2, 4) if jax.device_count() >= d)
     interval = 4
@@ -110,6 +193,7 @@ def run(quick: bool = False) -> List[Dict]:
             },
         }
     )
+    rows.extend(_overlap_rows(n_devices, interval))
     return rows
 
 

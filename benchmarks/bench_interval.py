@@ -13,6 +13,13 @@ for each round's full device turn; under `"async"` the fetch overlaps the
 next round's compute, so the fraction must drop while syncs/interval
 stays 1 (`interval_pipeline/compare` carries the ratios the CI lane
 checks).
+
+The `interval_overlap/*` rows run the split-phase interval program
+(`ShardedRuntime(overlap=True)`) against the serial reference on the same
+problem and report `steps_per_s` plus the structural exposed-comm
+fraction of the compiled interval HLO (`hlo_analysis.overlap_analysis`)
+— split-phase must not *increase* the exposed fraction (gated in
+`check_gates`).
 """
 from __future__ import annotations
 
@@ -107,6 +114,70 @@ def _pipeline_rows():
     return rows
 
 
+def _overlap_rows():
+    import jax
+
+    try:  # package mode (benchmarks.run) vs script mode
+        from .hlo_analysis import overlap_analysis
+    except ImportError:  # pragma: no cover - script mode
+        from hlo_analysis import overlap_analysis
+
+    from repro.dist.sharded_runtime import ShardedRuntime
+    from repro.pic import laser_ion_problem
+
+    n_dev = max(d for d in (1, 2, 4, 8) if d <= jax.device_count())
+    rows, derived = [], {}
+    for overlap in (False, True):
+        rt = ShardedRuntime(
+            laser_ion_problem(nz=64, nx=64, box_cells=16, ppc=4, seed=0),
+            n_devices=n_dev,
+            lb_interval=_PIPE_INTERVAL,
+            comm="neighbor",
+            overlap=overlap,
+            adaptive_mig=False,
+            mig_cap=256,
+        )
+        oa = overlap_analysis(rt.interval_hlo())
+        rt.run(_PIPE_INTERVAL)  # warmup: compile + first adoption
+        rt.flush()
+        t0 = time.perf_counter()
+        rt.run(_PIPE_STEPS)
+        rt.flush()
+        wall = time.perf_counter() - t0
+        mode = "overlapped" if overlap else "serial"
+        d = {
+            "n_devices": n_dev,
+            "steps_per_s": round(_PIPE_STEPS / wall, 2),
+            "exposed_comm_fraction": oa.exposed_comm_fraction,
+            "n_async_pairs": oa.n_async_pairs,
+        }
+        derived[overlap] = d
+        rows.append(
+            {
+                "name": f"interval_overlap/{mode}",
+                "us_per_call": round(1e6 * wall / _PIPE_STEPS, 1),
+                "derived": d,
+            }
+        )
+    rows.append(
+        {
+            "name": "interval_overlap/compare",
+            "us_per_call": 0.0,
+            "derived": {
+                "n_devices": derived[False]["n_devices"],
+                "exposed_comm_fraction_serial": derived[False]["exposed_comm_fraction"],
+                "exposed_comm_fraction_overlap": derived[True]["exposed_comm_fraction"],
+                "overlap_steps_over_serial": round(
+                    derived[True]["steps_per_s"]
+                    / max(derived[False]["steps_per_s"], 1e-9),
+                    4,
+                ),
+            },
+        }
+    )
+    return rows
+
+
 def run():
     rows = []
     for interval in (1, 3, 10, 30, 100):
@@ -120,4 +191,5 @@ def run():
             )
         )
     rows.extend(_pipeline_rows())
+    rows.extend(_overlap_rows())
     return rows

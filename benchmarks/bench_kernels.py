@@ -25,7 +25,7 @@ def run():
     rng = np.random.default_rng(0)
     n = 4096
     cap = 1024
-    from tests.test_kernels import random_particles  # reuse the fixture
+    from repro.kernels.ref import random_particles  # shared fixture
 
     p = random_particles(n, grid, seed=1)
     b = kops.bin_particles(p, grid, cap)

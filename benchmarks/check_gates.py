@@ -75,6 +75,18 @@ GATES: List[Gate] = [
          "truthy", why="async must reduce the host idle fraction vs sync"),
     Gate("bench_interval", "interval_pipeline/compare", "host_turn_overlapped",
          "truthy", why="async must hide the LB turn behind device compute"),
+    Gate("bench_interval", "interval_overlap/compare",
+         "exposed_comm_fraction_overlap", "<=", "exposed_comm_fraction_serial",
+         why="split-phase stepping must not increase the structural "
+             "exposed-comm fraction of the interval program"),
+    # -- bench_collectives: split-phase overlap must be safe and structural
+    Gate("bench_collectives", "collectives/overlap/compare", "physics_match",
+         "truthy", why="overlap=True must reproduce serial physics to f32 "
+                       "rounding (field max-rel-diff <= 1e-5, alive equal)"),
+    Gate("bench_collectives", "collectives/overlap/compare",
+         "exposed_comm_fraction_overlap", "<=", "exposed_comm_fraction_serial",
+         why="split-phase stepping must give the scheduler at least the "
+             "serial program's compute window per collective"),
     # -- bench_recovery: checkpointing stays cheap and safe ---------------
     Gate("bench_recovery", "recovery/compare", "ckpt_overhead_pct", "<=", 10.0,
          why="default-cadence async checkpointing must cost <=10% steps/s"),

@@ -1,0 +1,157 @@
+"""Trend comparison of ``BENCH_*.json`` artifacts against committed baselines.
+
+``check_gates.py`` answers "is this run acceptable?" with absolute
+predicates; this tool answers "is this run *worse than last time*?" by
+diffing a fresh artifact against the baseline of the same name committed
+under ``bench-results/``.  Usage::
+
+    python benchmarks/compare.py bench-results/BENCH_collectives.json
+    python benchmarks/compare.py out/BENCH_*.json --baseline-dir bench-results \
+        --max-regression 0.25 --fail
+
+For every row shared by the current artifact and its baseline, every
+tracked metric is compared with the right direction (steps/s up is good,
+bytes/step up is bad); changes beyond ``--max-regression`` (relative)
+print as ``REGRESS`` lines.  Artifacts recorded on a different backend or
+device count are flagged — the numbers are then trends across
+environments, not regressions — but still printed.
+
+Pure stdlib on purpose, like ``check_gates.py``: the trend check must run
+in any lane without jax or the repro package.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Tuple
+
+#: tracked derived-dict metrics: key -> direction ("up" = higher is
+#: better, "down" = lower is better).  Substring keys would be fragile;
+#: these are the exact names the bench modules emit.
+METRICS: Dict[str, str] = {
+    "tokens_per_s": "up",
+    "steps_per_s": "up",
+    "fraction_of_predicted": "up",
+    "bytes_per_step": "down",
+    "exposed_comm_fraction": "down",
+    "exposed_comm_fraction_serial": "down",
+    "exposed_comm_fraction_overlap": "down",
+    "host_idle_fraction": "down",
+}
+
+
+def _rows(artifact: dict) -> Dict[Tuple[str, str], dict]:
+    """(module, row-name) -> derived dict for every row in an artifact."""
+    out = {}
+    for module, entry in artifact.get("modules", {}).items():
+        if entry.get("error"):
+            continue
+        for row in entry.get("rows", []):
+            name = row.get("name")
+            if name:
+                out[(module, name)] = row.get("derived", {}) or {}
+    return out
+
+
+def _config_mismatch(cur: dict, base: dict) -> List[str]:
+    notes = []
+    cc, bc = cur.get("config", {}), base.get("config", {})
+    for key in ("backend", "device_count"):
+        if cc.get(key) != bc.get(key):
+            notes.append(f"{key}: baseline={bc.get(key)} current={cc.get(key)}")
+    return notes
+
+
+def compare_artifact(
+    current_path: str, baseline_path: str, max_regression: float
+) -> Tuple[int, int]:
+    """Diff one artifact against its baseline.  Returns
+    ``(n_compared, n_regressed)``; prints one line per change."""
+    with open(current_path) as fh:
+        cur = json.load(fh)
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+
+    mismatch = _config_mismatch(cur, base)
+    if mismatch:
+        print(
+            f"note {current_path}: environment differs from baseline "
+            f"({'; '.join(mismatch)}) — treat deltas as trends, not regressions"
+        )
+
+    cur_rows, base_rows = _rows(cur), _rows(base)
+    compared = regressed = 0
+    for key in sorted(base_rows):
+        if key not in cur_rows:
+            print(f"note {key[0]}::{key[1]}: row gone from current run")
+            continue
+        bd, cd = base_rows[key], cur_rows[key]
+        for metric, direction in METRICS.items():
+            if metric not in bd or metric not in cd:
+                continue
+            b, c = bd[metric], cd[metric]
+            if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+                continue
+            compared += 1
+            if b == c:
+                continue
+            # relative change, signed so that positive = better
+            delta = (c - b) / max(abs(b), 1e-12)
+            if direction == "down":
+                delta = -delta
+            arrow = f"{b} -> {c} ({delta:+.1%})"
+            if delta < -max_regression:
+                regressed += 1
+                print(f"REGRESS {key[0]}::{key[1]} {metric}: {arrow}")
+            elif delta > max_regression:
+                print(f"improve {key[0]}::{key[1]} {metric}: {arrow}")
+    new_rows = [k for k in cur_rows if k not in base_rows]
+    if new_rows:
+        print(f"note {current_path}: {len(new_rows)} row(s) not in baseline")
+    return compared, regressed
+
+
+def main(argv: Iterable[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff BENCH_*.json artifacts against committed baselines."
+    )
+    ap.add_argument("artifacts", nargs="+", help="current artifacts from benchmarks.run --out")
+    ap.add_argument(
+        "--baseline-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "bench-results"),
+        help="directory holding the committed baseline artifacts (default: bench-results/)",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.25,
+        help="relative change tolerated before a metric counts as regressed "
+        "(default 0.25 — CPU-lane timing is noisy; plan-derived bytes are exact)",
+    )
+    ap.add_argument(
+        "--fail",
+        action="store_true",
+        help="exit non-zero if anything regressed (default: report only)",
+    )
+    args = ap.parse_args(argv)
+
+    total = bad = 0
+    for path in args.artifacts:
+        baseline = os.path.join(args.baseline_dir, os.path.basename(path))
+        if os.path.abspath(baseline) == os.path.abspath(path):
+            print(f"skip {path}: is its own baseline")
+            continue
+        if not os.path.exists(baseline):
+            print(f"note {path}: no baseline {baseline} — commit one to start trending")
+            continue
+        compared, regressed = compare_artifact(path, baseline, args.max_regression)
+        total += compared
+        bad += regressed
+    print(f"{total} metric(s) compared, {bad} regressed")
+    return 1 if (bad and args.fail) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,14 +19,25 @@ graph (entry=1, while body xN, fusion/call x1), and computes:
                        registers/VMEM), weighted by multiplier.
 
 Shapes in post-SPMD HLO are per-partition, so all outputs are per-chip.
+
+:func:`overlap_analysis` adds the *structural* comm/compute-overlap view
+used by the split-phase interval program
+(``ShardedRuntime(overlap=True)``): for every collective it computes the
+bytes of compute that is dataflow-independent of it (neither ancestor nor
+descendant inside the same computation) and an *exposed-comm fraction* —
+payload / (payload + independent window) — which drops as the program
+gives the scheduler more compute to hide each transfer behind.  On
+backends that emit async pairs (``collective-permute-start``/``-done``,
+GPU with ``repro.launch.xla.GPU_PERF_FLAGS``) it also reports how many
+pairs actually span fusions in program order.
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
-__all__ = ["analyze_hlo", "HLOAnalysis"]
+__all__ = ["analyze_hlo", "HLOAnalysis", "overlap_analysis", "OverlapAnalysis"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -171,12 +182,10 @@ class HLOAnalysis:
         }
 
 
-def analyze_hlo(hlo: str) -> HLOAnalysis:
-    comps, entry = _parse_computations(hlo)
-    if entry is None:
-        # fall back: the largest computation is the entry
-        entry = max(comps, key=lambda c: len(comps[c].instructions))
-
+def _multipliers(
+    comps: Dict[str, Computation], entry: str
+) -> Tuple[Dict[str, float], Dict[str, int]]:
+    """Execution multiplier per computation (entry=1, while body xTrips)."""
     multipliers: Dict[str, float] = {c: 0.0 for c in comps}
     trip_counts: Dict[str, int] = {}
 
@@ -202,6 +211,16 @@ def analyze_hlo(hlo: str) -> HLOAnalysis:
                     visit(c, mult)
 
     visit(entry, 1.0)
+    return multipliers, trip_counts
+
+
+def analyze_hlo(hlo: str) -> HLOAnalysis:
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        # fall back: the largest computation is the entry
+        entry = max(comps, key=lambda c: len(comps[c].instructions))
+
+    multipliers, trip_counts = _multipliers(comps, entry)
 
     dot_flops = 0.0
     n_dots = 0
@@ -268,4 +287,193 @@ def analyze_hlo(hlo: str) -> HLOAnalysis:
         traffic_bytes=traffic,
         trip_counts=trip_counts,
         n_dots=n_dots,
+    )
+
+
+# ---------------------------------------------------------------------------
+# structural comm/compute overlap
+# ---------------------------------------------------------------------------
+
+#: instruction kinds that count as "compute" for the overlap window — the
+#: things a latency-hiding scheduler can actually run behind a transfer.
+_WINDOW_OPS = ("fusion", "scatter", "dot", "convolution", "reduce")
+
+
+@dataclass
+class CollectiveOverlap:
+    """One collective's structural overlap opportunity.
+
+    ``window_bytes`` is the total result-buffer size of compute
+    instructions in the same computation that are dataflow-independent of
+    the collective (neither feed it nor consume it, transitively) — the
+    compute the scheduler could hide the transfer behind.
+    ``exposed_fraction`` = payload / (payload + window): 1.0 means the
+    collective has nothing to hide behind, -> 0 means an arbitrarily deep
+    independent window.
+    """
+
+    name: str
+    op: str
+    computation: str
+    payload_bytes: float
+    window_bytes: float
+    exposed_fraction: float
+    is_async_pair: bool
+    window_compute_sites: int
+    spanned_compute_sites: int
+
+
+@dataclass
+class OverlapAnalysis:
+    collectives: List[CollectiveOverlap]
+    exposed_comm_fraction: float
+    payload_bytes: float
+    n_async_pairs: int
+    async_pairs_spanning_compute: int
+
+    @property
+    def summary(self) -> dict:
+        return {
+            "n_collectives": len(self.collectives),
+            "exposed_comm_fraction": self.exposed_comm_fraction,
+            "collective_payload_bytes": self.payload_bytes,
+            "n_async_pairs": self.n_async_pairs,
+            "async_pairs_spanning_compute": self.async_pairs_spanning_compute,
+            "min_exposed_fraction": min(
+                (c.exposed_fraction for c in self.collectives), default=1.0
+            ),
+        }
+
+
+def _dataflow(comp: Computation) -> Tuple[Dict[str, List[str]], Dict[str, List[str]]]:
+    """Operand / user adjacency restricted to instructions of ``comp``."""
+    ops_of: Dict[str, List[str]] = {}
+    users_of: Dict[str, List[str]] = {n: [] for n in comp.by_name}
+    for ins in comp.instructions:
+        names = [n for n in _operand_names(ins) if n in comp.by_name]
+        ops_of[ins.name] = names
+        for n in names:
+            users_of[n].append(ins.name)
+    return ops_of, users_of
+
+
+def _reach(seeds: List[str], adj: Dict[str, List[str]]) -> Set[str]:
+    seen = set(seeds)
+    stack = list(seeds)
+    while stack:
+        for nxt in adj.get(stack.pop(), []):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append(nxt)
+    return seen
+
+
+def overlap_analysis(hlo: str) -> OverlapAnalysis:
+    """Structural comm/compute overlap of an optimized HLO module.
+
+    For every collective (sync form, or an async ``-start``/``-done``
+    pair), computes the dataflow-independent compute window in its
+    computation and the resulting exposed-comm fraction, payload-weighted
+    across collectives (while-loop bodies weighted by trip count).  This
+    is a *structural* metric: it measures what the program allows the
+    scheduler to overlap, independent of backend timing — which is what
+    the split-phase interval program changes and what its CI gate checks.
+    """
+    comps, entry = _parse_computations(hlo)
+    if not comps:
+        return OverlapAnalysis([], 0.0, 0.0, 0, 0)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instructions))
+    multipliers, _ = _multipliers(comps, entry)
+
+    out: List[CollectiveOverlap] = []
+    for cname, comp in comps.items():
+        mult = multipliers.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        sync: List[Instruction] = []
+        starts: Dict[str, Instruction] = {}
+        dones: List[Instruction] = []
+        for ins in comp.instructions:
+            for kind in _COLLECTIVES:
+                if ins.op == kind:
+                    sync.append(ins)
+                elif ins.op == f"{kind}-start":
+                    starts[ins.name] = ins
+                elif ins.op == f"{kind}-done":
+                    dones.append(ins)
+        if not sync and not starts:
+            continue
+
+        ops_of, users_of = _dataflow(comp)
+        pos = {ins.name: i for i, ins in enumerate(comp.instructions)}
+
+        # (first, last, payload_carrier, is_async) per collective site;
+        # async pairs are keyed by their matched start/done instructions
+        sites: List[Tuple[Instruction, Instruction, Instruction, bool]] = []
+        paired_starts: Set[str] = set()
+        for d in dones:
+            s = next(
+                (starts[o] for o in _operand_names(d) if o in starts), None
+            )
+            if s is not None:
+                paired_starts.add(s.name)
+                sites.append((s, d, d, True))
+        for s in starts.values():
+            if s.name not in paired_starts:  # done got optimized away?
+                sites.append((s, s, s, False))
+        for c in sync:
+            sites.append((c, c, c, False))
+
+        for first, last, carrier, is_async in sites:
+            payload, _ = _shape_info(carrier.type_str)
+            anc = _reach([first.name], ops_of)
+            desc = _reach([last.name], users_of)
+            related = anc | desc
+            window = [
+                ins
+                for ins in comp.instructions
+                if ins.name not in related and ins.op in _WINDOW_OPS
+            ]
+            window_bytes = float(
+                sum(_shape_info(ins.type_str)[0] for ins in window)
+            )
+            spanned = sum(
+                1
+                for ins in window
+                if pos[first.name] < pos[ins.name] < pos[last.name]
+            )
+            denom = payload + window_bytes
+            out.append(
+                CollectiveOverlap(
+                    name=carrier.name,
+                    op=carrier.op,
+                    computation=cname,
+                    payload_bytes=mult * payload,
+                    window_bytes=window_bytes,
+                    exposed_fraction=(payload / denom) if denom > 0 else 1.0,
+                    is_async_pair=is_async,
+                    window_compute_sites=len(window),
+                    spanned_compute_sites=spanned,
+                )
+            )
+
+    total_payload = sum(c.payload_bytes for c in out)
+    if total_payload > 0:
+        exposed = (
+            sum(c.payload_bytes * c.exposed_fraction for c in out)
+            / total_payload
+        )
+    else:
+        exposed = 0.0
+    n_pairs = sum(1 for c in out if c.is_async_pair)
+    n_span = sum(
+        1 for c in out if c.is_async_pair and c.spanned_compute_sites > 0
+    )
+    return OverlapAnalysis(
+        collectives=out,
+        exposed_comm_fraction=exposed,
+        payload_bytes=total_payload,
+        n_async_pairs=n_pairs,
+        async_pairs_spanning_compute=n_span,
     )

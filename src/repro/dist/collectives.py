@@ -47,6 +47,9 @@ __all__ = [
     "shard_map",
     "axis_size",
     "ring_all_gather",
+    "NeighborExchangeHandle",
+    "neighbor_exchange_start",
+    "neighbor_exchange_done",
     "neighbor_exchange",
     "neighbor_reduce",
 ]
@@ -87,6 +90,69 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     return ordered.reshape((n * x.shape[0],) + x.shape[1:])
 
 
+class NeighborExchangeHandle:
+    """In-flight directional exchange issued by
+    :func:`neighbor_exchange_start` — holds the (not yet consumed)
+    ``ppermute`` results until :func:`neighbor_exchange_done` folds them in.
+
+    The handle is a trace-time object: it never crosses a jit boundary.
+    What it buys is a *dataflow window*: every instruction the caller emits
+    between ``start`` and ``done`` is independent of the collectives, so
+    XLA's latency-hiding scheduler (async collectives on GPU, see
+    ``repro.launch.xla.GPU_PERF_FLAGS``) is free to run the transfers
+    behind that compute instead of serializing on them.
+    """
+
+    __slots__ = ("arrivals",)
+
+    def __init__(self, arrivals):
+        self.arrivals = arrivals
+
+
+def neighbor_exchange_start(payloads, axis_name: str, *, carry=None):
+    """Issue the directional sends of a neighbour exchange; do not consume.
+
+    Same exchange contract as :func:`neighbor_exchange` (one ``ppermute``
+    per nonzero ring offset, offset 0 passes through), split into an
+    issue/finalize pair: ``start`` returns ``(handle, carry)`` immediately
+    so the caller can run collective-independent compute (e.g. the
+    split-phase interior deposit) before :func:`neighbor_exchange_done`
+    folds the arrivals in.
+
+    ``carry`` is an optional pytree of values the caller will consume
+    *inside* the overlap window.  Payloads and carry pass through one
+    ``jax.lax.optimization_barrier`` together, which pins the phase
+    boundary: XLA cannot fuse the payload producers (the frontier deposit)
+    with the window compute (the interior deposit) into one kernel, so the
+    collectives keep a genuinely independent compute window for the
+    scheduler to hide them behind.  Returns ``(handle, carry_out)`` —
+    ``carry_out is None`` when no carry was given.
+    """
+    n = axis_size(axis_name)
+    if carry is None:
+        payloads = jax.lax.optimization_barrier(payloads)
+    else:
+        payloads, carry = jax.lax.optimization_barrier((payloads, carry))
+    out = {}
+    for o, tree in payloads.items():
+        k = o % n
+        if k == 0:
+            out[o] = tree
+            continue
+        perm = [(i, (i + k) % n) for i in range(n)]
+        out[o] = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis_name, perm), tree
+        )
+    return NeighborExchangeHandle(out), carry
+
+
+def neighbor_exchange_done(handle: NeighborExchangeHandle):
+    """Finalize a :func:`neighbor_exchange_start`: return ``arrivals`` with
+    the same offset keys — ``arrivals[o]`` is the payload addressed to this
+    device by the device ``o`` hops behind it."""
+    return handle.arrivals
+
+
 def neighbor_exchange(payloads, axis_name: str):
     """Exchange per-offset payloads with ring neighbours.
 
@@ -100,19 +166,14 @@ def neighbor_exchange(payloads, axis_name: str):
     addressed to this device by the device ``o`` hops *behind* it.  Offset
     ``0`` (a device talking to its own slots) passes through untouched —
     no collective is emitted for it.
+
+    Implemented as an immediate issue/finalize pair — the split-phase
+    overlap path calls :func:`neighbor_exchange_start` /
+    :func:`neighbor_exchange_done` directly to open a compute window
+    between the two.
     """
-    n = axis_size(axis_name)
-    out = {}
-    for o, tree in payloads.items():
-        k = o % n
-        if k == 0:
-            out[o] = tree
-            continue
-        perm = [(i, (i + k) % n) for i in range(n)]
-        out[o] = jax.tree.map(
-            lambda a: jax.lax.ppermute(a, axis_name, perm), tree
-        )
-    return out
+    handle, _ = neighbor_exchange_start(payloads, axis_name)
+    return neighbor_exchange_done(handle)
 
 
 def neighbor_reduce(init, payloads, fold_fn, axis_name: str):

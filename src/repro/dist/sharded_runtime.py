@@ -62,6 +62,25 @@ device assembles the global frame through the dense index tables
 mapping-agnostic; kept as the executable specification the neighbour path
 is validated against (both match the global solver to f32 rounding).
 
+``overlap=True`` restructures each scanned step into **split-phase
+stepping** (either ``comm`` mode): the particle phase advances every
+particle but deposits only the *frontier* — particles whose post-move cell
+can reach a strip-sent cell (``repro.pic.boxes.frontier_cell_mask``).  The
+current-fold strip sends are issued right after that frontier pass
+(``repro.dist.collectives.neighbor_exchange_start``), the *interior*
+deposit — the complement, geometrically unable to touch any sent strip —
+runs inside the resulting dataflow window, and the arrivals are folded in
+only afterwards (``neighbor_exchange_done``).  Physics is identical to the
+monolithic step to f32 rounding (strip-sent cells are bitwise equal; only
+the per-cell sum order changes), the collectives gain a data-independent
+compute window the width of the interior deposit for XLA's latency-hiding
+scheduler (``repro.launch.xla.GPU_PERF_FLAGS``), and the price is a second
+masked deposit sweep.  ``overlap=False`` (default) keeps the monolithic
+step as the executable non-overlapped reference;
+``benchmarks/hlo_analysis.overlap_analysis`` verifies the window
+*structurally* on :meth:`ShardedRuntime.interval_hlo` output and
+``benchmarks/bench_collectives.py`` gates the exposed-comm fraction.
+
 On LB adoption the runtime *re-commits the sharding*: the new mapping
 becomes a slot permutation applied on device (one gather program with
 ``out_shardings``; no device→host transfer) so the next interval runs with
@@ -110,19 +129,33 @@ from ..launch.mesh import BOX_AXIS, make_box_mesh, slot_home_devices
 from ..pic.boxes import (
     BoxDecomposition,
     box_slot_layout,
+    frontier_cell_mask,
     halo_strip_tables,
     interior_cell_map,
     padded_cell_map,
 )
 from ..pic.deposition import box_work_counters
-from ..pic.engine import IntervalPipeline, field_phase_stacked, particle_phase_stacked
+from ..pic.engine import (
+    IntervalPipeline,
+    field_phase_stacked,
+    particle_phase_stacked,
+    particle_phase_stacked_frontier,
+    particle_phase_stacked_interior,
+)
 from ..pic.fields import Fields, make_sponge
 from ..pic.grid import Grid2D
 from ..pic.particles import Particles, kinetic_energy
 from ..pic.problem import ProblemSetup
 from ..pic.stepper import Simulation
 from .box_runtime import _MIN_HALO, _np_box_ids, _round_up
-from .collectives import neighbor_exchange, neighbor_reduce, ring_all_gather, shard_map
+from .collectives import (
+    neighbor_exchange,
+    neighbor_exchange_done,
+    neighbor_exchange_start,
+    neighbor_reduce,
+    ring_all_gather,
+    shard_map,
+)
 from .runtime_api import (
     _StragglerMixin,
     restore_balancer,
@@ -171,6 +204,15 @@ class ShardedRuntime(_StragglerMixin):
                   destination-aware emigrant packs over directional
                   ``ppermute`` hops; ``"ring"`` is the reference
                   all-gather path (see the module docstring).
+    overlap:      ``False`` (default) runs the monolithic step — one
+                  deposit, collectives strictly between the phases (the
+                  executable non-overlapped reference).  ``True`` enables
+                  split-phase stepping: frontier deposit → strip sends
+                  issued → interior deposit inside the collective window →
+                  arrivals folded in (see the module docstring).  Same
+                  physics to f32 rounding; costs a second masked deposit
+                  sweep, buys the scheduler a latency-hiding window
+                  (``benchmarks/bench_collectives.py`` measures both).
     pipeline:     ``"sync"`` (default) fetches each interval's counter
                   history before dispatching the next interval — the
                   executable reference.  ``"async"`` double-buffers the
@@ -219,6 +261,7 @@ class ShardedRuntime(_StragglerMixin):
         *,
         halo: int = _MIN_HALO,
         comm: str = "neighbor",
+        overlap: bool = False,
         pipeline: str = "sync",
         layout: str = "morton",
         locality_shift: int = 1,
@@ -252,6 +295,7 @@ class ShardedRuntime(_StragglerMixin):
         self.decomp = BoxDecomposition(grid)
         self.halo = halo
         self.comm = comm
+        self.overlap = bool(overlap)
         self.pipeline = validate_pipeline(pipeline)
         self.layout = layout
         self.locality_shift = int(locality_shift)
@@ -471,9 +515,10 @@ class ShardedRuntime(_StragglerMixin):
 
     def _plan_key(self) -> Tuple:
         if self.comm == "ring":
-            return ("ring", tuple(d[0] for d in self._mig_caps))
+            return ("ring", self.overlap, tuple(d[0] for d in self._mig_caps))
         return (
             "neighbor",
+            self.overlap,
             self._offsets,
             tuple(self._pair_caps[o] for o in self._offsets),
             tuple(tuple(sorted(d.items())) for d in self._mig_caps),
@@ -525,6 +570,28 @@ class ShardedRuntime(_StragglerMixin):
             "pair_caps": dict(self._pair_caps),
             "hop_radius": self.hop_radius(),
         }
+
+    def interval_hlo(self, n_steps: Optional[int] = None) -> str:
+        """Optimized (post-SPMD) HLO text of the committed interval program.
+
+        Lowers and compiles the exact program :meth:`run` would dispatch
+        for an ``n_steps`` piece (default: one full ``lb_interval``) under
+        the current exchange plan, and returns ``compiled.as_text()`` —
+        the input of ``benchmarks.hlo_analysis``'s structural checks
+        (``overlap_analysis`` verifies the split-phase collective window
+        on it; tests and ``bench_collectives`` gate the exposed-comm
+        fraction).  Ahead-of-time lowering only: nothing is executed and
+        no buffer is donated, but the call waits for in-flight pipeline
+        rounds (it reads the committed tail state for shapes/shardings).
+        """
+        n = int(n_steps) if n_steps else max(1, self.lb_interval)
+        fn = self._interval_fn(n)
+        tiles, species = self._pipe.state
+        lowered = fn.lower(
+            tiles, species, self._slot_box_dev, self._slot_of_dev,
+            jnp.float32(self.t),
+        )
+        return lowered.compile().as_text()
 
     # ------------------------------------------------------------------
     # adaptive emigrant-pack capacity (observed-demand controller)
@@ -707,6 +774,10 @@ class ShardedRuntime(_StragglerMixin):
         grid, local_grid, halo = self.grid, self.local_grid, self.halo
         order, laser, dt = self.shape_order, self.laser, grid.dt
         comm, n_dev, bpd = self.comm, self.n_devices, self._bpd
+        overlap = self.overlap
+        FRONTIER = (
+            jnp.asarray(frontier_cell_mask(grid, halo, order)) if overlap else None
+        )
         caps, qm = list(self._caps), list(self._qm)
         mig_caps = [dict(d) for d in self._mig_caps]
         offsets = self._offsets
@@ -954,23 +1025,82 @@ class ShardedRuntime(_StragglerMixin):
                     padded = halo_paste_neighbor(tiles)
                 # 2. particle phase on all owned slots at once
                 sp_in = tuple(to_particles(d, s) for s, d in enumerate(species))
-                sp2, j3, counts = particle_phase_stacked(
-                    padded, sp_in, my_origin, local_grid,
-                    domain_grid=grid, shape_order=order,
-                )
-                work = box_work_counters(counts, grid)
-                # 3. current fold: overlapping deposit strips scatter-add
-                #    into each padded frame (strip form of halo_fold_plan)
-                if comm == "ring":
-                    j_all = ring_all_gather(j3, BOX_AXIS)  # (S, 3, pn, pn)
-                    gJ = (
-                        jnp.zeros((3, grid.n_cells), jnp.float32)
-                        .at[:, cmap_all.reshape(-1)]
-                        .add(j_all.transpose(1, 0, 2, 3).reshape(3, -1))
+                if overlap:
+                    # split-phase: advance everything, deposit the frontier
+                    # only — the strips the fold sends are complete now
+                    sp2, jF, counts, flags = particle_phase_stacked_frontier(
+                        padded, sp_in, my_origin, local_grid,
+                        domain_grid=grid, shape_order=order,
+                        frontier_mask=FRONTIER,
                     )
-                    jp = jnp.moveaxis(gJ[:, my_cmap], 1, 0)  # (bpd, 3, pn, pn)
+                    work = box_work_counters(counts, grid)
+                    # 3. issue the fold collectives from the frontier
+                    #    deposit, run the interior deposit inside their
+                    #    dataflow window, fold arrivals in afterwards
+                    if comm == "ring":
+                        jF, (sp2, flags) = jax.lax.optimization_barrier(
+                            (jF, (sp2, flags))
+                        )
+                        j_all = ring_all_gather(jF, BOX_AXIS)  # (S, 3, pn, pn)
+                        jI = particle_phase_stacked_interior(
+                            sp2, my_origin, local_grid,
+                            shape_order=order, frontier_flags=flags,
+                        )
+                        gJ = (
+                            jnp.zeros((3, grid.n_cells), jnp.float32)
+                            .at[:, cmap_all.reshape(-1)]
+                            .add(j_all.transpose(1, 0, 2, 3).reshape(3, -1))
+                        )
+                        # interior deposits never reach another frame's
+                        # view (they sit >= halo inside their own box), so
+                        # the local tile add reproduces the global fold
+                        jp = jnp.moveaxis(gJ[:, my_cmap], 1, 0) + jI
+                    else:
+                        handle, (sp2, flags) = neighbor_exchange_start(
+                            strip_payloads(jF.reshape(bpd, 3, PNSQ), FOLD_SRC),
+                            BOX_AXIS,
+                            carry=(sp2, flags),
+                        )
+                        jI = particle_phase_stacked_interior(
+                            sp2, my_origin, local_grid,
+                            shape_order=order, frontier_flags=flags,
+                        )
+                        j3 = jF + jI
+                        acc = jnp.concatenate(
+                            [
+                                j3.transpose(1, 0, 2, 3).reshape(3, -1),
+                                jnp.zeros((3, 1), jnp.float32),
+                            ],
+                            axis=1,
+                        )
+                        arrivals = neighbor_exchange_done(handle)
+                        fold = strip_scatter(FOLD_DST)
+                        for o in sorted(arrivals):
+                            acc = fold(acc, o, arrivals[o])
+                        jp = (
+                            acc[:, : bpd * PNSQ]
+                            .reshape(3, bpd, pnz, pnx)
+                            .transpose(1, 0, 2, 3)
+                        )
                 else:
-                    jp = current_fold_neighbor(j3)
+                    sp2, j3, counts = particle_phase_stacked(
+                        padded, sp_in, my_origin, local_grid,
+                        domain_grid=grid, shape_order=order,
+                    )
+                    work = box_work_counters(counts, grid)
+                    # 3. current fold: overlapping deposit strips scatter-
+                    #    add into each padded frame (strip form of
+                    #    halo_fold_plan)
+                    if comm == "ring":
+                        j_all = ring_all_gather(j3, BOX_AXIS)  # (S, 3, pn, pn)
+                        gJ = (
+                            jnp.zeros((3, grid.n_cells), jnp.float32)
+                            .at[:, cmap_all.reshape(-1)]
+                            .add(j_all.transpose(1, 0, 2, 3).reshape(3, -1))
+                        )
+                        jp = jnp.moveaxis(gJ[:, my_cmap], 1, 0)  # (bpd, 3, pn, pn)
+                    else:
+                        jp = current_fold_neighbor(j3)
                 # 4. field phase, keep interiors
                 tiles2 = field_phase_stacked(
                     padded, jp, my_static, t, local_grid, halo, laser=laser

@@ -4,18 +4,40 @@
 binned layout with an explicit 4x4 scatter loop (no P matrices, no matmuls)
 — a genuinely independent code path.  End-to-end, ``pic_substep`` is also
 validated against the global pure-jnp PIC step (repro.pic.*) in tests.
+
+``random_particles`` is the shared synthetic-population fixture: both the
+kernel test suite and the standalone benchmarks build their inputs from it,
+so benchmarks never need the test tree on ``sys.path``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..pic.grid import Grid2D
+from ..pic.particles import Particles
 from ..pic.shapes import shape_weights
 from .common import HALO
 from .constants import CELL_OPS, DEPOSIT_OPS, DEPOSIT_TILE, PUSH_OPS
 
-__all__ = ["deposit_local_tiles_ref", "work_counters_ref"]
+__all__ = ["deposit_local_tiles_ref", "work_counters_ref", "random_particles"]
+
+
+def random_particles(n, grid: Grid2D, seed=0, margin=3.0, u_scale=0.5) -> Particles:
+    """Reproducible random population on ``grid`` (some particles dead)."""
+    rng = np.random.default_rng(seed)
+    return Particles(
+        z=jnp.asarray(rng.uniform(margin, grid.lz - margin, n), jnp.float32),
+        x=jnp.asarray(rng.uniform(margin, grid.lx - margin, n), jnp.float32),
+        ux=jnp.asarray(rng.normal(0, u_scale, n), jnp.float32),
+        uy=jnp.asarray(rng.normal(0, u_scale, n), jnp.float32),
+        uz=jnp.asarray(rng.normal(0, u_scale, n), jnp.float32),
+        w=jnp.asarray(rng.uniform(0.5, 1.5, n), jnp.float32),
+        alive=jnp.asarray(rng.uniform(size=n) > 0.1),  # some dead particles
+        q=jnp.asarray(-1.0),
+        m=jnp.asarray(1.0),
+    )
 
 
 def _component_tiles(sz, sx, val, slot_live, off_z, off_x, bz, bx):

@@ -22,9 +22,17 @@ __all__ = [
 
 #: Tuned GPU compiler flags (jax.dev gpu_performance_tips + related repos):
 #: latency-hiding scheduling + async collectives overlap comm with compute.
+#: The async pair matters doubly for the split-phase interval program
+#: (``ShardedRuntime(overlap=True)``): the scheduler turns its
+#: data-independent interior-deposit window into hidden collective time by
+#: emitting ``collective-permute-start``/``-done`` pairs spanning the
+#: window's fusions (``benchmarks.hlo_analysis.overlap_analysis`` checks
+#: the structure).
 GPU_PERF_FLAGS = (
     "--xla_gpu_enable_latency_hiding_scheduler=true",
     "--xla_gpu_enable_highest_priority_async_stream=true",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_async_collective_permute=true",
     "--xla_gpu_triton_gemm_any=True",
 )
 

@@ -25,6 +25,7 @@ __all__ = [
     "HALO_DIRS",
     "HaloStripTables",
     "halo_strip_tables",
+    "frontier_cell_mask",
     "box_slot_layout",
 ]
 
@@ -312,6 +313,61 @@ def halo_strip_tables(grid: Grid2D, halo: int) -> HaloStripTables:
         fold_src=tuple(fold_src),
         fold_dst=tuple(fold_dst),
     )
+
+
+def frontier_cell_mask(grid: Grid2D, halo: int, shape_order: int = 3) -> np.ndarray:
+    """Padded-tile cells whose particles the halo exchange depends on.
+
+    Returns bool ``(pnz, pnx)`` over the halo-padded tile frame: ``True``
+    marks **frontier** cells — a particle whose post-move cell is there can
+    deposit into (or has left its box through) a cell the directional fold
+    strips send to a neighbour, so its deposit must be complete before the
+    strip collectives are issued.  ``False`` marks **interior** cells whose
+    deposits geometrically cannot touch any sent strip — the compute window
+    the split-phase step overlaps the collectives with.
+
+    Derived from the same slice-plan geometry as the exchange itself: the
+    union of :func:`halo_strip_tables`' ``fold_src`` cells (everything any
+    direction ever sends), dilated by the deposit stencil reach of
+    ``shape_order`` (a particle in cell ``c`` writes cells ``[c - r, c + r]``
+    per axis for both staggerings, ``r = SUPPORT[order] // 2``), plus every
+    guard cell (a particle observed outside the interior is mid-migration
+    and always frontier).  For boxes too small to hold an interior band
+    (``box size <= 2 * (2*halo + r - halo)`` per axis) the mask is all-True
+    and the split-phase step degenerates to the monolithic one — correct,
+    just with nothing to overlap.
+    """
+    from .shapes import SUPPORT
+
+    if shape_order not in SUPPORT:
+        raise ValueError(f"unsupported shape order {shape_order}; expected 1 or 3")
+    reach = SUPPORT[shape_order] // 2
+    tables = halo_strip_tables(grid, halo)
+    pnz, pnx = grid.box_nz + 2 * halo, grid.box_nx + 2 * halo
+    sent = np.zeros(pnz * pnx, bool)
+    for fs in tables.fold_src:
+        sent[fs] = True
+    mask = sent.reshape(pnz, pnx).copy()
+    # dilate by the stencil reach, axis-separably (Chebyshev ball): any cell
+    # within `reach` of a sent cell can receive deposit from its particles
+    for _ in range(reach):
+        grown = mask.copy()
+        grown[1:, :] |= mask[:-1, :]
+        grown[:-1, :] |= mask[1:, :]
+        mask = grown
+    for _ in range(reach):
+        grown = mask.copy()
+        grown[:, 1:] |= mask[:, :-1]
+        grown[:, :-1] |= mask[:, 1:]
+        mask = grown
+    # guard cells are already inside the sent band (fold strips read the
+    # full 2*halo edge band), but make the contract explicit: off-interior
+    # particles always classify frontier
+    mask[:halo, :] = True
+    mask[-halo:, :] = True
+    mask[:, :halo] = True
+    mask[:, -halo:] = True
+    return mask
 
 
 def box_slot_layout(grid: Grid2D, order: str = "morton") -> np.ndarray:

@@ -67,6 +67,8 @@ __all__ = [
     "particle_phase",
     "field_phase",
     "particle_phase_stacked",
+    "particle_phase_stacked_frontier",
+    "particle_phase_stacked_interior",
     "field_phase_stacked",
     "build_step_body",
     "make_interval_fn",
@@ -202,6 +204,139 @@ def particle_phase_stacked(
         for _ in species
     )
     return jax.vmap(one, in_axes=(0, sp_axes, 0))(tiles6, species, origins)
+
+
+def _frontier_flag(p: Particles, origin, grid: Grid2D, mask: jax.Array) -> jax.Array:
+    """Whether each particle's post-move cell lies on the frontier.
+
+    ``mask`` is the padded-tile bool map of ``repro.pic.boxes.
+    frontier_cell_mask``; the cell lookup is clipped to the tile so a
+    particle observed outside it (mid-migration extremes, parked dead
+    padding) classifies through the boundary cells — which are always
+    frontier by construction.
+    """
+    cz = jnp.clip((p.z - origin[0]) / grid.dz, 0.0, grid.nz - 1).astype(jnp.int32)
+    cx = jnp.clip((p.x - origin[1]) / grid.dx, 0.0, grid.nx - 1).astype(jnp.int32)
+    return mask[cz, cx]
+
+
+def particle_phase_stacked_frontier(
+    tiles6: jax.Array,
+    species: Tuple[Particles, ...],
+    origins: jax.Array,
+    local_grid: Grid2D,
+    *,
+    domain_grid: Grid2D,
+    shape_order: int = 3,
+    frontier_mask: jax.Array,
+):
+    """Frontier half of the split-phase step: advance everything, deposit
+    only what the halo exchange depends on.
+
+    Same advance (gather + Boris push + move) as
+    :func:`particle_phase_stacked` for **all** particles — the split never
+    recomputes the push — but the current deposit masks to particles whose
+    post-move cell is on the frontier (``frontier_mask``, from
+    ``repro.pic.boxes.frontier_cell_mask``): exactly the deposits the fold
+    strips can see.  Masking zeroes the deposit coefficient (an exact 0.0
+    contribution), so the returned ``j3`` equals the monolithic deposit
+    bitwise on every strip-sent cell — the strip collectives can be issued
+    from it immediately, before any interior deposit work.
+
+    Returns ``(species', j3_frontier, counts, frontier_flags)``:
+    ``species'``/``counts`` are identical to the monolithic pass (counts
+    cover all alive particles — the in-situ cost assessment is
+    unchanged); ``frontier_flags`` is one ``(slots, cap)`` bool array per
+    species for :func:`particle_phase_stacked_interior` to deposit the
+    exact complement.
+    """
+    dom = domain_grid
+
+    def one(tile6, sp, origin):
+        fields = Fields(*tile6)
+        jx = jnp.zeros(local_grid.shape, jnp.float32)
+        jy = jnp.zeros(local_grid.shape, jnp.float32)
+        jz = jnp.zeros(local_grid.shape, jnp.float32)
+        counts = jnp.zeros(local_grid.n_boxes, jnp.float32)
+        out_species, flags = [], []
+        for p in sp:
+            z_loc, x_loc = p.z - origin[0], p.x - origin[1]
+            eb = gather_fields(fields, z_loc, x_loc, local_grid, shape_order)
+            p = advance_positions(boris_push(p, eb, local_grid.dt), dom, local_grid.dt)
+            out_species.append(p)
+            on_frontier = _frontier_flag(p, origin, local_grid, frontier_mask)
+            flags.append(on_frontier)
+            p_loc = p._replace(z=p.z - origin[0], x=p.x - origin[1])
+            jx_, jy_, jz_ = deposit_current(
+                p_loc._replace(alive=p_loc.alive & on_frontier),
+                local_grid,
+                shape_order,
+            )
+            jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
+            counts = counts + box_particle_counts(p_loc, local_grid)
+        return (
+            tuple(out_species),
+            jnp.stack([jx, jy, jz]),
+            counts[0],
+            tuple(flags),
+        )
+
+    sp_axes = tuple(
+        Particles(z=0, x=0, ux=0, uy=0, uz=0, w=0, alive=0, q=None, m=None)
+        for _ in species
+    )
+    # keep q/m scalar on the way out (out_axes=None), so the advanced
+    # species feed straight into particle_phase_stacked_interior's
+    # unbatched-charge vmap axes
+    return jax.vmap(
+        one,
+        in_axes=(0, sp_axes, 0),
+        out_axes=(sp_axes, 0, 0, tuple(0 for _ in species)),
+    )(tiles6, species, origins)
+
+
+def particle_phase_stacked_interior(
+    species: Tuple[Particles, ...],
+    origins: jax.Array,
+    local_grid: Grid2D,
+    *,
+    shape_order: int = 3,
+    frontier_flags: Tuple[jax.Array, ...],
+):
+    """Interior half of the split-phase step: the complement deposit.
+
+    Takes the **already advanced** species and per-species frontier flags
+    from :func:`particle_phase_stacked_frontier` (no physics is recomputed)
+    and deposits the particles the frontier pass masked out.  By
+    construction of ``frontier_cell_mask`` these deposits cannot touch any
+    strip-sent cell, so this entire pass is data-independent of the strip
+    collectives — the compute window the overlap schedules them behind.
+    ``j3_frontier + j3_interior`` matches the monolithic deposit to f32
+    rounding (the split only reorders the per-cell sum).
+    """
+
+    def one(sp, origin, fl):
+        jx = jnp.zeros(local_grid.shape, jnp.float32)
+        jy = jnp.zeros(local_grid.shape, jnp.float32)
+        jz = jnp.zeros(local_grid.shape, jnp.float32)
+        for p, on_frontier in zip(sp, fl):
+            p_loc = p._replace(z=p.z - origin[0], x=p.x - origin[1])
+            jx_, jy_, jz_ = deposit_current(
+                p_loc._replace(alive=p_loc.alive & ~on_frontier),
+                local_grid,
+                shape_order,
+            )
+            jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
+        return jnp.stack([jx, jy, jz])
+
+    sp_axes = tuple(
+        Particles(z=0, x=0, ux=0, uy=0, uz=0, w=0, alive=0, q=None, m=None)
+        for _ in species
+    )
+    flag_axes = tuple(0 for _ in species)
+    return jax.vmap(one, in_axes=(sp_axes, 0, flag_axes))(
+        species, origins, frontier_flags
+    )
 
 
 def field_phase_stacked(

@@ -109,6 +109,25 @@ def test_architecture_doc_covers_the_async_pipeline():
         assert needle in text, f"docs/architecture.md must cover {needle!r}"
 
 
+def test_architecture_doc_covers_split_phase_overlap():
+    """The split-phase subsection of the collective layer: frontier
+    geometry, the issue/finalize exchange API, and the structural
+    exposed-comm verification story."""
+    text = open(os.path.join(DOCS, "architecture.md")).read()
+    for needle in (
+        "Split-phase stepping",
+        "frontier_cell_mask",
+        "neighbor_exchange_start",
+        "neighbor_exchange_done",
+        "overlap_analysis",
+        "exposed-comm fraction",
+        "optimization_barrier",
+        "overlap=True",
+        "collectives/overlap/compare",
+    ):
+        assert needle in text, f"docs/architecture.md must cover {needle!r}"
+
+
 def test_architecture_doc_covers_the_recovery_layer():
     """The recovery section: what is checkpointed, how the commit point
     interacts with the async staleness contract, and the recovery
@@ -205,6 +224,7 @@ TUNING_KNOBS = {
     "lb_interval": "bench_interval",
     "pipeline": "bench_interval",
     "comm": "bench_collectives",
+    "overlap": "bench_collectives",
     "locality_shift": "bench_collectives",
     "mig_cap": "bench_collectives",
     "improvement_threshold": "bench_threshold",

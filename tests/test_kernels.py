@@ -14,32 +14,20 @@ import pytest
 from repro.kernels import ops as kops
 from repro.kernels.deposition import deposit_local_tiles
 from repro.kernels.gather_push import gather_push_move
-from repro.kernels.ref import deposit_local_tiles_ref, work_counters_ref
+from repro.kernels.ref import (
+    deposit_local_tiles_ref,
+    random_particles,
+    work_counters_ref,
+)
 from repro.pic import (
     Fields,
     Grid2D,
-    Particles,
     advance_positions,
     boris_push,
     deposit_current,
     gather_fields,
 )
 from repro.pic.deposition import box_particle_counts, box_work_counters
-
-
-def random_particles(n, grid, seed=0, margin=3.0, u_scale=0.5):
-    rng = np.random.default_rng(seed)
-    return Particles(
-        z=jnp.asarray(rng.uniform(margin, grid.lz - margin, n), jnp.float32),
-        x=jnp.asarray(rng.uniform(margin, grid.lx - margin, n), jnp.float32),
-        ux=jnp.asarray(rng.normal(0, u_scale, n), jnp.float32),
-        uy=jnp.asarray(rng.normal(0, u_scale, n), jnp.float32),
-        uz=jnp.asarray(rng.normal(0, u_scale, n), jnp.float32),
-        w=jnp.asarray(rng.uniform(0.5, 1.5, n), jnp.float32),
-        alive=jnp.asarray(rng.uniform(size=n) > 0.1),  # some dead particles
-        q=jnp.asarray(-1.0),
-        m=jnp.asarray(1.0),
-    )
 
 
 def random_fields(grid, seed=1, amp=0.1):

@@ -1,0 +1,286 @@
+"""Split-phase interior/frontier stepping (`ShardedRuntime(overlap=True)`).
+
+Three layers of evidence that the overlapped interval program is the same
+physics as the monolithic one:
+
+  * geometry — ``frontier_cell_mask`` covers every fold-sent cell with the
+    full deposit reach (brute-force dilation oracle), keeps the guard rim,
+    and leaves a genuinely interior region on 16-cell boxes;
+  * runtime equality — overlap=True vs overlap=False on the same problem,
+    both ``comm`` paths, 1 device everywhere and 2 devices on the
+    multi-device lane (fields to f32 rounding, alive counts exactly);
+  * acceptance — an 8-device subprocess run through real LB adoptions
+    (conservation + physics match), plus a 2-device subprocess that
+    compiles both interval programs and checks the *structural* claim on
+    the HLO: the overlapped program's exposed-comm fraction is no worse
+    than the serial one's, with a nonempty independent compute window
+    (``benchmarks/hlo_analysis.overlap_analysis``).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices; run with REPRO_HOST_DEVICES=2 (see conftest)",
+)
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# geometry
+# ---------------------------------------------------------------------------
+
+
+def _grid(box_cells=16, n=32):
+    from repro.pic import Grid2D
+
+    return Grid2D(nz=n, nx=n, dz=0.3, dx=0.3, box_nz=box_cells, box_nx=box_cells)
+
+
+def test_frontier_mask_covers_fold_sources_with_reach():
+    """Oracle: every fold-sent cell, dilated by the deposit reach
+    (Chebyshev ball — deposit windows are axis-aligned rectangles), plus
+    the guard rim, must be marked frontier.  Exactly that set: nothing
+    more (the interior must stay as large as the geometry allows)."""
+    from repro.pic.boxes import frontier_cell_mask, halo_strip_tables
+    from repro.pic.shapes import SUPPORT
+
+    grid, halo, order = _grid(), 4, 3
+    reach = SUPPORT[order] // 2
+    mask = frontier_cell_mask(grid, halo, order)
+    pnz, pnx = grid.box_nz + 2 * halo, grid.box_nx + 2 * halo
+    assert mask.shape == (pnz, pnx)
+
+    tables = halo_strip_tables(grid, halo)
+    sent = np.zeros((pnz, pnx), bool)
+    for fs in tables.fold_src:
+        sent.reshape(-1)[np.asarray(fs)] = True
+    expected = np.zeros_like(sent)
+    zz, xx = np.nonzero(sent)
+    for z, x in zip(zz, xx):
+        expected[
+            max(z - reach, 0) : z + reach + 1, max(x - reach, 0) : x + reach + 1
+        ] = True
+    expected[:halo, :] = True
+    expected[-halo:, :] = True
+    expected[:, :halo] = True
+    expected[:, -halo:] = True
+    np.testing.assert_array_equal(mask, expected)
+
+
+def test_frontier_mask_leaves_an_interior_on_16_cell_boxes():
+    from repro.pic.boxes import frontier_cell_mask
+
+    mask = frontier_cell_mask(_grid(box_cells=16), halo=4, shape_order=3)
+    assert not mask.all(), "16-cell boxes must keep a nonempty interior"
+    # the interior is the centre block beyond 2*halo + reach from any edge
+    inner = mask[10:-10, 10:-10]
+    assert inner.size > 0 and not inner.any()
+
+
+def test_frontier_mask_rejects_unknown_order():
+    from repro.pic.boxes import frontier_cell_mask
+
+    with pytest.raises(ValueError):
+        frontier_cell_mask(_grid(), halo=4, shape_order=2)
+
+
+def test_frontier_mask_small_boxes_are_all_frontier():
+    """8-cell boxes with halo 4: the fold band + reach covers everything —
+    overlap degrades to an empty interior pass, never to wrong physics."""
+    from repro.pic.boxes import frontier_cell_mask
+
+    mask = frontier_cell_mask(_grid(box_cells=8), halo=4, shape_order=3)
+    assert mask.all()
+
+
+# ---------------------------------------------------------------------------
+# runtime equality (in-process)
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(comm, n_devices, n_steps=6, **kw):
+    from repro.dist import ShardedRuntime
+    from repro.pic import laser_ion_problem
+
+    out = {}
+    for overlap in (False, True):
+        rt = ShardedRuntime(
+            laser_ion_problem(nz=32, nx=32, box_cells=16, ppc=3, seed=0),
+            n_devices,
+            lb_interval=3,
+            comm=comm,
+            overlap=overlap,
+            layout="row",
+            mig_cap=64,
+            adaptive_mig=False,
+            **kw,
+        )
+        rt.run(n_steps)
+        fields = np.stack([np.asarray(c) for c in rt.fields])
+        out[overlap] = (fields, rt.total_alive(), rt.dropped_total)
+    return out
+
+
+def _assert_equal_physics(pair):
+    (f_ser, n_ser, d_ser), (f_ovl, n_ovl, d_ovl) = pair[False], pair[True]
+    scale = max(np.abs(f_ser).max(), 1e-30)
+    assert np.abs(f_ovl - f_ser).max() <= 1e-5 * scale
+    assert n_ovl == n_ser
+    assert d_ovl == d_ser == 0
+
+
+@pytest.mark.parametrize("comm", ["neighbor", "ring"])
+def test_overlap_matches_monolithic_1_device(comm):
+    _assert_equal_physics(_run_pair(comm, 1, improvement_threshold=1e9))
+
+
+@multi_device
+@pytest.mark.parametrize("comm", ["neighbor", "ring"])
+def test_overlap_matches_monolithic_2_devices(comm):
+    _assert_equal_physics(_run_pair(comm, 2, improvement_threshold=1e9))
+
+
+@multi_device
+def test_overlap_matches_through_adoptions_2_devices():
+    """With the adoption gate open, both modes see identical counters, so
+    they adopt identically — physics must still match through the slot
+    permutations."""
+    _assert_equal_physics(
+        _run_pair("neighbor", 2, n_steps=9, improvement_threshold=0.0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# subprocess acceptance (8 devices, real adoptions) + HLO structure
+# ---------------------------------------------------------------------------
+
+ACCEPTANCE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+
+from repro.dist import ShardedRuntime
+from repro.pic import laser_ion_problem
+
+out = {}
+for overlap in (False, True):
+    rt = ShardedRuntime(
+        laser_ion_problem(nz=64, nx=64, box_cells=16, ppc=4, seed=0),
+        8,
+        lb_interval=3,
+        comm="neighbor",
+        overlap=overlap,
+        improvement_threshold=0.0,  # adopt on any improvement
+        mig_cap=256,
+        adaptive_mig=False,
+    )
+    n0 = rt.total_alive()
+    rt.run(9)
+    out[overlap] = {
+        "n0": n0,
+        "n_final": rt.total_alive(),
+        "dropped": rt.dropped_total,
+        "adoptions": int(sum(e.adopted for e in rt.balancer.events)),
+        "fields": np.stack([np.asarray(c) for c in rt.fields]),
+        "box_counts_total": float(rt.box_counts().sum()),
+    }
+
+f_ser, f_ovl = out[False].pop("fields"), out[True].pop("fields")
+scale = float(max(np.abs(f_ser).max(), 1e-30))
+result = {
+    "serial": out[False],
+    "overlap": out[True],
+    "field_max_rel_diff": float(np.abs(f_ovl - f_ser).max() / scale),
+}
+print("RESULT " + json.dumps(result))
+"""
+
+
+def _run_subprocess(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_overlap_acceptance_8_devices_with_adoptions():
+    r = _run_subprocess(ACCEPTANCE_SCRIPT)
+    ser, ovl = r["serial"], r["overlap"]
+    # conservation on both paths, through real adoptions
+    for mode in (ser, ovl):
+        assert mode["n_final"] == mode["n0"], r
+        assert mode["box_counts_total"] == mode["n0"], r
+        assert mode["dropped"] == 0, r
+    # both modes saw the same counters, so the same adoption sequence
+    assert ovl["adoptions"] == ser["adoptions"], r
+    assert ser["adoptions"] >= 1, "gate open + skewed load must adopt"
+    assert r["field_max_rel_diff"] <= 1e-5, r
+
+
+HLO_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+sys.path.insert(0, os.path.join(%(root)r, "benchmarks"))
+from hlo_analysis import overlap_analysis
+
+from repro.dist import ShardedRuntime
+from repro.pic import laser_ion_problem
+
+summaries = {}
+for overlap in (False, True):
+    rt = ShardedRuntime(
+        laser_ion_problem(nz=32, nx=32, box_cells=16, ppc=2, seed=0),
+        2,
+        lb_interval=4,
+        comm="neighbor",
+        overlap=overlap,
+        layout="row",
+        improvement_threshold=1e9,
+        mig_cap=64,
+        adaptive_mig=False,
+    )
+    oa = overlap_analysis(rt.interval_hlo())
+    summaries["overlap" if overlap else "serial"] = {
+        **oa.summary,
+        "max_window_sites": max(
+            (c.window_compute_sites for c in oa.collectives), default=0
+        ),
+    }
+print("RESULT " + json.dumps(summaries))
+"""
+
+
+@pytest.mark.slow
+def test_overlap_hlo_structure_2_devices():
+    """The compiled overlapped interval program must give every strip
+    collective at least the serial program's independent compute window;
+    when the backend emits async start/done pairs (GPU lanes), they must
+    actually span compute in program order."""
+    r = _run_subprocess(HLO_SCRIPT % {"root": _ROOT})
+    ser, ovl = r["serial"], r["overlap"]
+    assert ovl["n_collectives"] >= 1, r
+    assert ovl["exposed_comm_fraction"] <= ser["exposed_comm_fraction"], r
+    # the collectives must have a nonempty dataflow-independent window
+    assert ovl["max_window_sites"] >= 1, r
+    if ovl["n_async_pairs"]:  # XLA:CPU lowers permutes synchronously
+        assert ovl["async_pairs_spanning_compute"] >= 1, r
