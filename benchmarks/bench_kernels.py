@@ -1,12 +1,19 @@
-"""Pallas kernel microbenchmarks (deposition + gather/push).
+"""Pallas kernel microbenchmarks + the Pallas-vs-XLA backend differential.
 
 NOTE: kernels run in interpret mode on CPU (the container has no TPU), so
 us_per_call reflects the *interpreter*, not TPU performance — the TPU-side
 performance statement is the roofline analysis.  What this bench validates
-is the work-counter accounting and the oracle-vs-kernel equivalence cost.
+is the work-counter accounting and the backend equivalence the
+``engine_backend`` flag promises: ``ShardedRuntime(engine_backend="pallas")``
+must reproduce the XLA backend's physics to f32 rounding over a full LB
+interval, and the in-kernel executed-tile counters it feeds the balancer
+must equal ``repro.pic.deposition.box_work_counters`` bitwise
+(``kernels/backend/compare`` — gated in ``benchmarks/check_gates.py``;
+the differential-test suite is ``tests/test_kernel_backends.py``).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -19,10 +26,8 @@ from repro.pic import Grid2D
 from repro.kernels.ref import work_counters_ref
 
 
-def run():
-    rows = []
+def _deposition_row():
     grid = Grid2D(nz=64, nx=64, dz=0.3, dx=0.3, box_nz=16, box_nx=16)
-    rng = np.random.default_rng(0)
     n = 4096
     cap = 1024
     from repro.kernels.ref import random_particles  # shared fixture
@@ -46,16 +51,149 @@ def run():
     dt = (time.perf_counter() - t0) / 3
     counters = np.asarray(out[3])
     expected = np.asarray(work_counters_ref(b.counts, grid, tile=256, which="deposit"))
+    return {
+        "name": "pallas_deposition_interpret",
+        "us_per_call": round(1e6 * dt, 1),
+        "derived": {
+            "n_particles": n,
+            "n_boxes": grid.n_boxes,
+            "counters_match_formula": bool(np.allclose(counters, expected)),
+            "total_work_units": float(counters.sum()),
+        },
+    }
+
+
+def _backend_rows(quick: bool):
+    """Run the same problem through both ``engine_backend`` values of the
+    sharded runtime and compare physics, particle accounting, counter
+    fidelity, and (interpreter) walltime."""
+    from repro.dist.sharded_runtime import ShardedRuntime
+    from repro.pic import laser_ion_problem
+    from repro.pic.deposition import box_work_counters
+
+    n_steps = 4 if quick else 8
+
+    def make(backend):
+        prob = laser_ion_problem(nz=32, nx=32, box_cells=8, ppc=2, seed=3)
+        # threshold 10.0: suppress autonomous adoptions so both backends
+        # step the same mapping (their work signals legitimately differ)
+        return ShardedRuntime(
+            prob, 1, lb_interval=n_steps, engine_backend=backend,
+            improvement_threshold=10.0,
+        )
+
+    rows, runtimes, rates = [], {}, {}
+    for backend in ("xla", "pallas"):
+        rt = make(backend)
+        rt.run(n_steps)  # warm the interval program
+        rt.flush()
+        t0 = time.perf_counter()
+        rt.run(n_steps)
+        rt.flush()
+        dt = time.perf_counter() - t0
+        runtimes[backend] = rt
+        rates[backend] = dt / n_steps
+        rows.append(
+            {
+                "name": f"kernels/backend/{backend}",
+                "us_per_call": round(1e6 * dt / n_steps, 1),
+                "derived": {
+                    "n_steps": 2 * n_steps,
+                    "alive": float(rt._alive_by_box.sum()),
+                    "dropped_total": rt.dropped_total,
+                    "interpret": bool(getattr(rt, "interpret", True)),
+                },
+            }
+        )
+
+    rt_x, rt_p = runtimes["xla"], runtimes["pallas"]
+    fx, fp = rt_x.fields, rt_p.fields
+    max_rel = 0.0
+    for name in ("ex", "ey", "ez", "bx", "by", "bz"):
+        a = np.asarray(getattr(fx, name))
+        b = np.asarray(getattr(fp, name))
+        scale = max(float(np.abs(a).max()), 1e-30)
+        max_rel = max(max_rel, float(np.abs(a - b).max() / scale))
+
+    # counter fidelity on controlled inputs: run the actual kernels and
+    # require integer equality with the host formula, not approximation
+    from repro.pic.particles import Particles
+
+    grid = Grid2D(nz=16, nx=16, dz=0.5, dx=0.5, box_nz=8, box_nx=8)
+    halo, cap = 3, 512
+    pnz = pnx = grid.box_nz + 2 * halo
+    local = Grid2D(
+        nz=pnz, nx=pnx, dz=grid.dz, dx=grid.dx, box_nz=pnz, box_nx=pnx, cfl=grid.cfl
+    )
+    counts = np.array([0, 512, 137, 256])
+    coords = np.asarray(grid.box_coords)
+    centers_z = (coords[:, 0] + 0.5) * grid.box_nz * grid.dz
+    centers_x = (coords[:, 1] + 0.5) * grid.box_nx * grid.dx
+    S = grid.n_boxes
+    zeros = jnp.zeros((S, cap), jnp.float32)
+    species = Particles(
+        z=jnp.asarray(np.broadcast_to(centers_z[:, None], (S, cap)).astype(np.float32)),
+        x=jnp.asarray(np.broadcast_to(centers_x[:, None], (S, cap)).astype(np.float32)),
+        ux=zeros, uy=zeros, uz=zeros, w=zeros + 1.0,
+        alive=jnp.asarray(np.arange(cap)[None, :] < counts[:, None]),
+        q=jnp.float32(-1.0), m=jnp.float32(1.0),
+    )
+    origins = jnp.asarray(
+        np.stack(
+            [
+                (coords[:, 0] * grid.box_nz - halo) * grid.dz,
+                (coords[:, 1] * grid.box_nx - halo) * grid.dx,
+            ],
+            axis=1,
+        ).astype(np.float32)
+    )
+    _, _, _, work = kops.particle_phase_slots(
+        jnp.zeros((S, 6, pnz, pnx), jnp.float32), (species,), origins, local,
+        domain_grid=grid, interpret=True,
+    )
+    bitwise = bool(
+        np.array_equal(
+            np.asarray(work), np.asarray(box_work_counters(jnp.asarray(counts), grid))
+        )
+    )
+
     rows.append(
         {
-            "name": "pallas_deposition_interpret",
-            "us_per_call": round(1e6 * dt, 1),
+            "name": "kernels/backend/compare",
+            "us_per_call": round(1e6 * rates["pallas"], 1),
             "derived": {
-                "n_particles": n,
-                "n_boxes": grid.n_boxes,
-                "counters_match_formula": bool(np.allclose(counters, expected)),
-                "total_work_units": float(counters.sum()),
+                "max_rel_field_diff": max_rel,
+                "physics_match": bool(max_rel <= 1e-4),
+                "alive_equal": bool(
+                    rt_x._alive_by_box.sum() == rt_p._alive_by_box.sum()
+                ),
+                "counters_bitwise_match": bitwise,
+                "dropped_pallas": rt_p.dropped_total,
+                "us_per_step_xla": round(1e6 * rates["xla"], 1),
+                "us_per_step_pallas": round(1e6 * rates["pallas"], 1),
+                "pallas_over_xla": round(rates["pallas"] / max(rates["xla"], 1e-12), 2),
             },
         }
     )
     return rows
+
+
+def run(quick: bool = False):
+    rows = [_deposition_row()]
+    rows.extend(_backend_rows(quick))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="shorter intervals for CI lanes (same rows, same gates)",
+    )
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(f"{r['name']}: {r['us_per_call']} us/call {r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -112,6 +112,23 @@ GATES: List[Gate] = [
     Gate("bench_scaling", "scaling/uniform_null/dynamic", "measured_speedup",
          ">=", 0.95,
          why="null case: enabling LB must not slow a balanced run down"),
+    # -- bench_kernels: the Pallas engine backend differential ------------
+    Gate("bench_kernels", "pallas_deposition_interpret", "counters_match_formula",
+         "truthy", why="the deposition kernel's in-kernel counters must "
+                       "reproduce the executed-work formula"),
+    Gate("bench_kernels", "kernels/backend/compare", "physics_match",
+         "truthy", why="engine_backend='pallas' must match the XLA backend "
+                       "to f32 rounding over a full LB interval (field "
+                       "max-rel-diff <= 1e-4)"),
+    Gate("bench_kernels", "kernels/backend/compare", "alive_equal",
+         "truthy", why="both backends must conserve the particle census"),
+    Gate("bench_kernels", "kernels/backend/compare", "counters_bitwise_match",
+         "truthy", why="the in-kernel work counters the balancer consumes "
+                       "must equal box_work_counters bitwise (integer "
+                       "equality) on identical per-box counts"),
+    Gate("bench_kernels", "kernels/backend/compare", "dropped_pallas",
+         "==", 0, why="a generously-sized slot capacity must not drop "
+                      "particles in the differential run"),
     # -- bench_moe_dlb: the serving lane (experts as slots) ---------------
     Gate("bench_moe_dlb", "moe_dlb/mixtral_toy/8dev/summary",
          "tokens_per_s_static", ">=", "tokens_per_s_none",

@@ -35,6 +35,8 @@ METRICS: Dict[str, str] = {
     "steps_per_s": "up",
     "fraction_of_predicted": "up",
     "bytes_per_step": "down",
+    "pallas_over_xla": "down",
+    "max_rel_field_diff": "down",
     "exposed_comm_fraction": "down",
     "exposed_comm_fraction_serial": "down",
     "exposed_comm_fraction_overlap": "down",

@@ -65,13 +65,22 @@ __all__ = [
     "StragglerLoop",
     "device_work",
     "validate_pipeline",
+    "validate_engine_backend",
     "snapshot_balancer",
     "restore_balancer",
     "PIPELINES",
+    "ENGINE_BACKENDS",
 ]
 
 #: the two interval-pipeline modes every runtime must accept
 PIPELINES = ("sync", "async")
+
+#: the two particle-phase kernel backends the PIC runtimes accept:
+#: ``"xla"`` (the pure-jnp windowed gather/scatter reference, work signal
+#: derived host-side via ``box_work_counters``) and ``"pallas"`` (the
+#: ``repro.kernels`` Pallas kernels, work signal read from the in-kernel
+#: counters — the paper's in-situ device-side assessment)
+ENGINE_BACKENDS = ("xla", "pallas")
 
 
 def validate_pipeline(pipeline: str) -> str:
@@ -82,6 +91,18 @@ def validate_pipeline(pipeline: str) -> str:
             f"pipeline must be one of {PIPELINES}, got {pipeline!r}"
         )
     return pipeline
+
+
+def validate_engine_backend(engine_backend: str) -> str:
+    """Validate an ``engine_backend=`` flag value against
+    :data:`ENGINE_BACKENDS` (shared by ``SimConfig`` and the PIC runtimes
+    so the error reads the same everywhere)."""
+    if engine_backend not in ENGINE_BACKENDS:
+        raise ValueError(
+            f"engine_backend must be one of {ENGINE_BACKENDS}, "
+            f"got {engine_backend!r}"
+        )
+    return engine_backend
 
 
 @runtime_checkable

@@ -134,6 +134,8 @@ from ..pic.boxes import (
     interior_cell_map,
     padded_cell_map,
 )
+from ..kernels.constants import DEPOSIT_TILE
+from ..kernels.ops import default_interpret, particle_phase_slots
 from ..pic.deposition import box_work_counters
 from ..pic.engine import (
     IntervalPipeline,
@@ -160,6 +162,7 @@ from .runtime_api import (
     _StragglerMixin,
     restore_balancer,
     snapshot_balancer,
+    validate_engine_backend,
     validate_pipeline,
 )
 from .sharding import state_shardings
@@ -223,6 +226,21 @@ class ShardedRuntime(_StragglerMixin):
                   module docstring).  Same physics to f32 rounding, same
                   one sync per interval — the sync is overlapped instead
                   of serializing the loop.
+    engine_backend: ``"xla"`` (default) runs the pure-jnp reference
+                  particle phase and derives the balancer's work signal
+                  from post-step alive counts via
+                  ``repro.pic.deposition.box_work_counters``.  ``"pallas"``
+                  runs the slot-batched Pallas kernels
+                  (``repro.kernels.ops.particle_phase_slots``) inside the
+                  same scanned interval program and feeds the balancer the
+                  *in-kernel* executed-tile work counters — the paper's
+                  in-situ measurement, with no host-side work model.
+                  Composes with both ``comm`` modes and both ``pipeline``
+                  modes; ``overlap=True`` raises (split-phase masking is
+                  XLA-only).  Off-TPU the kernels run in Pallas interpreter
+                  mode (``repro.kernels.ops.default_interpret``;
+                  ``REPRO_PALLAS_INTERPRET=1|0`` overrides), so the backend
+                  is CI-testable on fake CPU devices.
     layout:       slot curve for ``comm="neighbor"`` —
                   ``"morton"`` (default) or ``"row"``
                   (``repro.pic.boxes.box_slot_layout``).  The initial
@@ -263,6 +281,7 @@ class ShardedRuntime(_StragglerMixin):
         comm: str = "neighbor",
         overlap: bool = False,
         pipeline: str = "sync",
+        engine_backend: str = "xla",
         layout: str = "morton",
         locality_shift: int = 1,
         policy: str = "knapsack",
@@ -297,6 +316,22 @@ class ShardedRuntime(_StragglerMixin):
         self.comm = comm
         self.overlap = bool(overlap)
         self.pipeline = validate_pipeline(pipeline)
+        self.engine_backend = validate_engine_backend(engine_backend)
+        if self.engine_backend == "pallas" and self.overlap:
+            raise ValueError(
+                "engine_backend='pallas' does not compose with overlap=True: "
+                "split-phase frontier/interior deposit masking exists only in "
+                "the XLA particle phase (see docs/architecture.md, 'The "
+                "kernel backend')"
+            )
+        if self.engine_backend == "pallas" and shape_order != 3:
+            raise ValueError(
+                "engine_backend='pallas' supports shape_order=3 only (the "
+                f"kernels hard-code the order-3 B-spline), got {shape_order}"
+            )
+        #: run the Pallas kernels in interpreter mode (resolved once, at
+        #: construction — REPRO_PALLAS_INTERPRET overrides the backend check)
+        self.interpret = default_interpret()
         self.layout = layout
         self.locality_shift = int(locality_shift)
         self.shape_order = shape_order
@@ -380,6 +415,10 @@ class ShardedRuntime(_StragglerMixin):
         self._build_comm_plan()
         self._capacity_margin = float(capacity_margin)
         self._capacity_round = int(capacity_round)
+        if self.engine_backend == "pallas":
+            # the kernels iterate whole DEPOSIT_TILE-lane particle tiles, so
+            # every slot capacity must quantize to the tile size
+            self._capacity_round = int(np.lcm(self._capacity_round, DEPOSIT_TILE))
         self._caps: List[int] = []
         self._mig_caps: List[Dict[int, int]] = []
         self._mig_idle: Dict[Tuple[int, int], int] = {}
@@ -775,6 +814,7 @@ class ShardedRuntime(_StragglerMixin):
         order, laser, dt = self.shape_order, self.laser, grid.dt
         comm, n_dev, bpd = self.comm, self.n_devices, self._bpd
         overlap = self.overlap
+        engine_backend, interpret = self.engine_backend, self.interpret
         FRONTIER = (
             jnp.asarray(frontier_cell_mask(grid, halo, order)) if overlap else None
         )
@@ -1083,11 +1123,20 @@ class ShardedRuntime(_StragglerMixin):
                             .transpose(1, 0, 2, 3)
                         )
                 else:
-                    sp2, j3, counts = particle_phase_stacked(
-                        padded, sp_in, my_origin, local_grid,
-                        domain_grid=grid, shape_order=order,
-                    )
-                    work = box_work_counters(counts, grid)
+                    if engine_backend == "pallas":
+                        # slot-batched Pallas kernels: the balancer's work
+                        # signal is the in-kernel executed-tile counters,
+                        # not the host-derived box_work_counters formula
+                        sp2, j3, counts, work = particle_phase_slots(
+                            padded, sp_in, my_origin, local_grid,
+                            domain_grid=grid, interpret=interpret,
+                        )
+                    else:
+                        sp2, j3, counts = particle_phase_stacked(
+                            padded, sp_in, my_origin, local_grid,
+                            domain_grid=grid, shape_order=order,
+                        )
+                        work = box_work_counters(counts, grid)
                     # 3. current fold: overlapping deposit strips scatter-
                     #    add into each padded frame (strip form of
                     #    halo_fold_plan)
@@ -1153,12 +1202,18 @@ class ShardedRuntime(_StragglerMixin):
             for k in ("counts", "work", "alive", "dropped", "field_energy", "kinetic_energy")
         }
         specs_ys["emig_demand"] = P(None, None, BOX_AXIS)
+        smap_kwargs = {}
+        if engine_backend == "pallas":
+            # jax has no shard_map replication rule for pallas_call; every
+            # output spec here is explicit anyway, so the check is inert
+            smap_kwargs["check_rep"] = False
         fn = jax.jit(
             shard_map(
                 local_interval,
                 mesh=self.mesh,
                 in_specs=(sp_tiles, specs_species, P(BOX_AXIS), P(), P()),
                 out_specs=(sp_tiles, specs_species, specs_ys),
+                **smap_kwargs,
             ),
             donate_argnums=(0, 1),
         )

@@ -82,7 +82,8 @@ def _deposition_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("grid", "tile", "interpret", "dtype")
+    jax.jit,
+    static_argnames=("grid", "tile", "interpret", "dtype", "tile_shape", "cells_per_box"),
 )
 def deposit_local_tiles(
     counts: jax.Array,  # (n_boxes,) i32 alive particles per box
@@ -96,24 +97,35 @@ def deposit_local_tiles(
     tile: int = DEPOSIT_TILE,
     interpret: bool = True,
     dtype=jnp.float32,
+    tile_shape=None,  # (BZ, BX) override; default box + 2*HALO
+    cells_per_box=None,  # counter grid-work term; default grid.cells_per_box
 ):
     """Run the deposition kernel over all boxes.
 
     Returns (jx, jy, jz) local tiles of shape (n_boxes, BZ, BX) and the
-    per-box work counters (n_boxes,) i32.
+    per-box work counters (n_boxes,) i32.  ``tile_shape`` overrides the
+    output-tile extents (the sharded runtime's padded tiles carry a wider
+    halo than the kernel-default ``HALO``); ``cells_per_box`` overrides the
+    counter's grid-work term so the in-kernel counters stay bit-identical
+    to ``box_work_counters`` even when the local tile is padded.
     """
     n_boxes, cap = sz.shape
     if cap % tile:
         raise ValueError(f"cap ({cap}) must be a multiple of tile ({tile})")
-    bz = grid.box_nz + 2 * HALO
-    bx = grid.box_nx + 2 * HALO
+    if tile_shape is None:
+        bz = grid.box_nz + 2 * HALO
+        bx = grid.box_nx + 2 * HALO
+    else:
+        bz, bx = tile_shape
     kernel = functools.partial(
         _deposition_kernel,
         n_tiles_max=cap // tile,
         tile=tile,
         bz=bz,
         bx=bx,
-        cells_per_box=grid.cells_per_box,
+        cells_per_box=(
+            grid.cells_per_box if cells_per_box is None else int(cells_per_box)
+        ),
     )
     out_shape = [
         jax.ShapeDtypeStruct((n_boxes, bz, bx), dtype),

@@ -131,7 +131,7 @@ def _gather_push_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("grid", "tile", "interpret", "dt")
+    jax.jit, static_argnames=("grid", "tile", "interpret", "dt", "tile_shape")
 )
 def gather_push_move(
     counts: jax.Array,  # (n_boxes,) i32
@@ -147,13 +147,22 @@ def gather_push_move(
     dt: float,
     tile: int = 256,
     interpret: bool = True,
+    tile_shape=None,  # (BZ, BX) override; default box + 2*HALO
 ):
-    """Returns updated (sz, sx, ux, uy, uz) in binned layout + counters."""
+    """Returns updated (sz, sx, ux, uy, uz) in binned layout + counters.
+
+    ``tile_shape`` overrides the field-tile extents for callers whose
+    padded tiles carry a wider halo than the kernel-default ``HALO`` (the
+    sharded runtime's slot tiles).
+    """
     n_boxes, cap = sz.shape
     if cap % tile:
         raise ValueError(f"cap ({cap}) must be a multiple of tile ({tile})")
-    bz = grid.box_nz + 2 * HALO
-    bx = grid.box_nx + 2 * HALO
+    if tile_shape is None:
+        bz = grid.box_nz + 2 * HALO
+        bx = grid.box_nx + 2 * HALO
+    else:
+        bz, bx = tile_shape
     kernel = functools.partial(
         _gather_push_kernel,
         n_tiles_max=cap // tile,

@@ -17,6 +17,7 @@ quantization) — asserted in tests.
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Tuple
 
 import jax
@@ -35,14 +36,24 @@ __all__ = [
     "bin_particles",
     "pic_substep",
     "pic_substep_body",
+    "particle_phase_slots",
     "field_tiles",
     "assemble_grid",
     "Binned",
+    "default_interpret",
 ]
 
 
 def default_interpret() -> bool:
-    """Interpret Pallas kernels when not running on a real TPU."""
+    """Interpret Pallas kernels when not running on a real TPU.
+
+    ``REPRO_PALLAS_INTERPRET=1|0`` overrides the backend check either way
+    — CI's interpret-mode Pallas lane pins ``1`` so the kernels execute in
+    interpreter mode even where a compiled path exists.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env in ("0", "1"):
+        return env == "1"
     return jax.default_backend() != "tpu"
 
 
@@ -228,3 +239,96 @@ def pic_substep_body(
 pic_substep = jax.jit(
     pic_substep_body, static_argnames=("grid", "dt", "cap", "tile", "interpret")
 )
+
+
+# ---------------------------------------------------------------------------
+# slot-batched stacked entry point (the sharded runtime's Pallas backend)
+# ---------------------------------------------------------------------------
+
+
+def particle_phase_slots(
+    tiles6: jax.Array,
+    species: Tuple[Particles, ...],
+    origins: jax.Array,
+    local_grid: Grid2D,
+    *,
+    domain_grid: Grid2D,
+    tile: int = DEPOSIT_TILE,
+    interpret: bool = True,
+):
+    """Slot-batched Pallas variant of ``repro.pic.engine.particle_phase_stacked``.
+
+    Drop-in for the sharded runtime's monolithic particle phase: inputs are
+    the slot-major padded field tiles ``(slots, 6, pnz, pnx)``, species with
+    ``(slots, cap)`` leaves, and per-slot halo origins ``(slots, 2)``
+    (already including the ``-halo`` shift, so ``(z - origin)/dz`` is
+    directly the padded-tile cell coordinate the kernels consume).  No
+    binning happens here: the runtime's merge/pack paths maintain the
+    alive-prefix invariant (alive particles occupy each slot's leading
+    lanes), so the slot-major layout *is* the binned layout and
+    ``counts = alive.sum(axis=1)``.
+
+    Returns ``(species', j3, counts, work)`` — like the XLA stacked phase
+    plus the per-slot **in-kernel work counters** (``(slots,)`` f32, the
+    sum of the deposition and gather/push counters over all species): the
+    paper's in-situ device-side work assessment, which the Pallas backend
+    feeds to the balancer instead of the host-derived
+    ``box_work_counters`` formula.  For a single species on identical
+    inputs the counters equal ``box_work_counters(counts_pre, domain_grid)``
+    bit-for-bit (``counts_pre`` = alive before the boundary kill; the
+    kernels measure the work actually executed this step).
+    """
+    grid = local_grid
+    pnz, pnx = grid.box_nz, grid.box_nx
+    tile_shape = (pnz, pnx)
+    slots = tiles6.shape[0]
+    field_tiles6 = tuple(tiles6[:, i] for i in range(6))
+    oz = origins[:, 0:1]
+    ox = origins[:, 1:2]
+    inv_vol = 1.0 / (domain_grid.dz * domain_grid.dx)
+
+    j3 = jnp.zeros((slots, 3, pnz, pnx), jnp.float32)
+    counts = jnp.zeros(slots, jnp.float32)
+    work = jnp.zeros(slots, jnp.int32)
+    out_species = []
+    for p in species:
+        counts_pre = jnp.sum(p.alive, axis=1).astype(jnp.int32)
+        sz = (p.z - oz) / grid.dz
+        sx = (p.x - ox) / grid.dx
+        sz_n, sx_n, ux_n, uy_n, uz_n, cnt_push = gather_push_move(
+            counts_pre, sz, sx, p.ux, p.uy, p.uz, field_tiles6,
+            grid=grid, qm=p.q / p.m, dt=float(grid.dt), tile=tile,
+            interpret=interpret, tile_shape=tile_shape,
+        )
+        # back to the domain frame; kill leavers (they keep the new state,
+        # mirroring advance_positions; dead lanes keep the old state — the
+        # kernel pushes every lane of an executed tile, padding included)
+        z_new = sz_n * grid.dz + oz
+        x_new = sx_n * grid.dx + ox
+        inside = (
+            (z_new >= 0.0) & (z_new < domain_grid.lz)
+            & (x_new >= 0.0) & (x_new < domain_grid.lx)
+        )
+        alive_new = p.alive & inside
+        # direct order-3 deposition at the new positions/momenta
+        gamma = jnp.sqrt(1.0 + ux_n**2 + uy_n**2 + uz_n**2)
+        coef = jnp.where(alive_new, p.q * p.w * inv_vol, 0.0) / gamma
+        jx_t, jy_t, jz_t, cnt_dep = deposit_local_tiles(
+            counts_pre, sz_n, sx_n, coef * ux_n, coef * uy_n, coef * uz_n,
+            grid=grid, tile=tile, interpret=interpret,
+            tile_shape=tile_shape, cells_per_box=domain_grid.cells_per_box,
+        )
+        j3 = j3 + jnp.stack([jx_t, jy_t, jz_t], axis=1)
+        counts = counts + jnp.sum(alive_new, axis=1).astype(jnp.float32)
+        work = work + cnt_push + cnt_dep
+        out_species.append(
+            p._replace(
+                z=jnp.where(p.alive, z_new, p.z),
+                x=jnp.where(p.alive, x_new, p.x),
+                ux=jnp.where(p.alive, ux_n, p.ux),
+                uy=jnp.where(p.alive, uy_n, p.uy),
+                uz=jnp.where(p.alive, uz_n, p.uz),
+                alive=alive_new,
+            )
+        )
+    return tuple(out_species), j3, counts, work.astype(jnp.float32)

@@ -87,6 +87,7 @@ class StepOutputs(NamedTuple):
     work: jax.Array  # (n_boxes,) f32 — executed work units (in-kernel counters)
     field_energy: jax.Array  # scalar f32
     kinetic_energy: jax.Array  # scalar f32
+    dropped: jax.Array  # scalar i32 — particles lost to the bin capacity guard
 
 
 def particle_phase(
@@ -402,17 +403,22 @@ def build_step_body(
         jy = jnp.zeros(grid.shape, jnp.float32)
         jz = jnp.zeros(grid.shape, jnp.float32)
         counts = jnp.zeros(grid.n_boxes, jnp.float32)
+        dropped = jnp.int32(0)
         if use_pallas:
             work = jnp.zeros(grid.n_boxes, jnp.float32)
             new_species = []
             for p in species:
-                p2, (jx_, jy_, jz_), counters, counts_b, _nd = kops.pic_substep_body(
+                p2, (jx_, jy_, jz_), counters, counts_b, nd = kops.pic_substep_body(
                     fields, p, grid=grid, dt=dt, cap=pallas_cap, interpret=interpret
                 )
                 new_species.append(p2)
                 jx, jy, jz = jx + jx_, jy + jy_, jz + jz_
                 counts = counts + counts_b.astype(jnp.float32)
                 work = work + counters.astype(jnp.float32)
+                # the bin_particles capacity guard silently truncates a box
+                # beyond cap; those particles leave the simulation and must
+                # reach the runtime's dropped_total conservation accounting
+                dropped = dropped + nd
             species = tuple(new_species)
         else:
             # push + move + deposit all species with E^n, B^n
@@ -428,6 +434,7 @@ def build_step_body(
             work=work,
             field_energy=field_energy(fields, grid),
             kinetic_energy=sum(kinetic_energy(p) for p in species),
+            dropped=dropped,
         )
         return fields, species, out
 

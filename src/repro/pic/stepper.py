@@ -78,7 +78,16 @@ __all__ = ["SimConfig", "Simulation"]
 class SimConfig:
     shape_order: int = 3
     sponge_width: int = 8
+    # particle-phase kernel backend: "xla" (pure-jnp reference) or "pallas"
+    # (repro.kernels, in-kernel work counters).  Validated against
+    # repro.dist.runtime_api.ENGINE_BACKENDS; use_pallas=True is the legacy
+    # spelling of engine_backend="pallas" and either selects the kernels.
+    engine_backend: str = "xla"
     use_pallas: bool = False  # route deposition/push through Pallas kernels
+    # per-box particle-bin capacity for the Pallas backend (rounded up to the
+    # kernel tile).  None sizes it automatically at 4x the worst initial box
+    # occupancy; overflow beyond the capacity is counted in ``dropped_total``
+    pallas_cap: Optional[int] = None
     fused: bool = True  # scan the LB interval device-side (False: per-step)
     cost_strategy: str = "work_counter"  # heuristic | work_counter | activity_ledger
     heuristic_particle_weight: float = 0.75  # paper's Summit calibration
@@ -106,8 +115,17 @@ class Simulation:
     """Owns state + the interval engine + the host-side DLB driver."""
 
     def __init__(self, problem: ProblemSetup, config: SimConfig = SimConfig()):
+        # deferred import: repro.dist imports this module at package init
+        from ..dist.runtime_api import validate_engine_backend
+
         self.grid: Grid2D = problem.grid
         self.config = config
+        self.engine_backend = validate_engine_backend(config.engine_backend)
+        if config.use_pallas:  # legacy spelling of engine_backend="pallas"
+            self.engine_backend = "pallas"
+        #: particles silently truncated by the Pallas bin capacity guard
+        #: (conservation accounting — mirrors ShardedRuntime.dropped_total)
+        self.dropped_total = 0
         self.fields = Fields.zeros(self.grid)
         # private copies: the fused engine donates its input buffers, and the
         # problem's arrays must survive (fixtures/benchmarks reuse problems)
@@ -141,7 +159,8 @@ class Simulation:
 
         pallas_cap = None
         interpret = True
-        if config.use_pallas:
+        use_pallas = self.engine_backend == "pallas"
+        if use_pallas:
             from ..kernels import ops as kops
 
             interpret = kops.default_interpret()
@@ -151,9 +170,14 @@ class Simulation:
             for p in self.species:
                 init_counts += np.asarray(box_particle_counts(p, self.grid))
             tile = kops.DEPOSIT_TILE
-            pallas_cap = int(
-                max(1, int(np.ceil(init_counts.max() * 4 / tile))) * tile
-            )
+            if config.pallas_cap is not None:
+                pallas_cap = int(
+                    max(1, int(np.ceil(config.pallas_cap / tile))) * tile
+                )
+            else:
+                pallas_cap = int(
+                    max(1, int(np.ceil(init_counts.max() * 4 / tile))) * tile
+                )
         self._pallas_cap = pallas_cap
 
         self._step_body = build_step_body(
@@ -161,7 +185,7 @@ class Simulation:
             shape_order=config.shape_order,
             sponge=self._sponge,
             laser=self.laser,
-            use_pallas=config.use_pallas,
+            use_pallas=use_pallas,
             pallas_cap=pallas_cap,
             interpret=interpret,
         )
@@ -304,6 +328,7 @@ class Simulation:
             np.atleast_1d(host.field_energy),
             np.atleast_1d(host.kinetic_energy),
             progress_every,
+            dropped=np.atleast_1d(host.dropped),
         )
 
     # -- per-step driver (seed behaviour; benchmark/regression baseline) ---
@@ -318,6 +343,7 @@ class Simulation:
                 np.asarray(out.field_energy)[None],
                 np.asarray(out.kinetic_energy)[None],
                 progress_every,
+                dropped=np.asarray(out.dropped)[None],
             )
 
     # -- shared host-side bookkeeping --------------------------------------
@@ -328,6 +354,7 @@ class Simulation:
         fe: np.ndarray,
         ke: np.ndarray,
         progress_every: int = 0,
+        dropped: Optional[np.ndarray] = None,
     ) -> None:
         """Fold one fetched chunk (``(L, ...)`` histories) into the LB loop,
         the virtual-cluster walltime model, and the run history.
@@ -336,6 +363,8 @@ class Simulation:
         the round-boundary step, exactly what per-step execution feeds it.
         """
         cfg = self.config
+        if dropped is not None:
+            self.dropped_total += int(np.asarray(dropped).sum())
         n_steps = counts.shape[0]
         # true per-box cost for the walltime model = executed work units,
         # converted to seconds at the nominal device throughput

@@ -128,6 +128,27 @@ def test_architecture_doc_covers_split_phase_overlap():
         assert needle in text, f"docs/architecture.md must cover {needle!r}"
 
 
+def test_architecture_doc_covers_the_kernel_backend():
+    """The kernel-backend section: the engine_backend flag, where each
+    backend's work signal comes from, the support matrix, and the CI
+    story (interpret mode + the bench_kernels gates)."""
+    text = open(os.path.join(DOCS, "architecture.md")).read()
+    for needle in (
+        "The kernel backend",
+        "engine_backend",
+        "particle_phase_slots",
+        "in-kernel",
+        "box_work_counters",
+        "bitwise",
+        "REPRO_PALLAS_INTERPRET",
+        "test_kernel_backends.py",
+        "kernels/backend/compare",
+        "BENCH_kernels.json",
+        "dropped_total",
+    ):
+        assert needle in text, f"docs/architecture.md must cover {needle!r}"
+
+
 def test_architecture_doc_covers_the_recovery_layer():
     """The recovery section: what is checkpointed, how the commit point
     interacts with the async staleness contract, and the recovery
@@ -225,6 +246,7 @@ TUNING_KNOBS = {
     "pipeline": "bench_interval",
     "comm": "bench_collectives",
     "overlap": "bench_collectives",
+    "engine_backend": "bench_kernels",
     "locality_shift": "bench_collectives",
     "mig_cap": "bench_collectives",
     "improvement_threshold": "bench_threshold",
@@ -311,6 +333,7 @@ def test_readme_quickstart_recipe():
         "REPRO_HOST_DEVICES=8",
         "ShardedRuntime",
         'pipeline="async"',
+        'engine_backend="pallas"',
         "docs/architecture.md",
         "docs/tuning.md",
         "docs/benchmarks.md",
